@@ -1,0 +1,62 @@
+"""§Roofline: render the per-(arch × shape) table from the dry-run JSONs.
+
+roofline_fraction = time the chip MUST spend on model math
+                    (MODEL_FLOPS / chips / peak) ÷ the binding resource
+                    term of the compiled step — i.e. how much of the
+                    step's best-case (perfectly overlapped) wall time is
+                    mandatory model compute. This is the score §Perf
+                    hillclimbs push up by driving the dominant term down.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW = dict(peak=197e12, hbm=819e9, ici=50e9)
+
+
+def load(dirname="experiments/dryrun", mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, f"*_{mesh}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fraction(rec) -> float:
+    t = rec["roofline"]
+    bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    useful_s = rec["model_flops"] / rec["chips"] / HW["peak"]
+    return useful_s / bound if bound else 0.0
+
+
+def render(rows, print_fn=print):
+    print_fn(
+        "arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+        "model_flops,useful_ratio,roofline_fraction,peak_mem_GiB"
+    )
+    for r in rows:
+        if r.get("status") == "skipped":
+            print_fn(f"{r['arch']},{r['shape']},{r['mesh']},SKIP,,,,,,,")
+            continue
+        if r.get("status") != "ok":
+            print_fn(f"{r['arch']},{r['shape']},{r['mesh']},FAILED,,,,,,,")
+            continue
+        t = r["roofline"]
+        print_fn(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{t['compute_s']:.3e},{t['memory_s']:.3e},{t['collective_s']:.3e},"
+            f"{t['dominant']},{r['model_flops']:.3e},"
+            f"{r['useful_flops_ratio']:.3f},{fraction(r):.3f},"
+            f"{r['memory']['peak_estimate_bytes']/2**30:.2f}"
+        )
+
+
+def run(print_fn=print):
+    rows = load()
+    if not rows:
+        print_fn("# no dry-run records found; run: python -m repro.launch.dryrun --all")
+        return []
+    print_fn("# Roofline table (single-pod 16x16, per-device terms)")
+    render(rows, print_fn)
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark harness — one section per paper figure/table.
+
+  Fig.1/Fig.2  granularity sweeps (PFL compute-bound, CC memory-bound)
+  Fig.3/Fig.4  Aira end-to-end over the 10 latency-critical benchmarks
+  §Roofline    per-(arch × shape) roofline terms from the dry-run
+  µbench       CPU wall-clock of each benchmark's serial JAX kernel
+               (``name,us_per_call,derived`` CSV)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+
+def _microbench(print_fn=print):
+    from repro.bench_suite import BENCHMARKS
+
+    print_fn("# µbench — serial kernel wall-clock (CPU, one iteration)")
+    print_fn("name,us_per_call,derived")
+    for name, b in BENCHMARKS.items():
+        data = b.build()
+        f = jax.jit(b.serial_value)
+        jax.block_until_ready(f(data))
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            jax.block_until_ready(f(data))
+        us = (time.perf_counter() - t0) / reps * 1e6
+        n = jax.tree.leaves(b.items(data))[0].shape[0]
+        print_fn(f"{name},{us:.1f},items={n}")
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import fig12_granularity, fig34_aira, roofline
+
+    fig12_granularity.run()
+    print()
+    fig34_aira.run(timing=not fast)
+    print()
+    roofline.run()
+    print()
+    if not fast:
+        _microbench()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the Aira pipeline end-to-end on one latency-critical
+benchmark — profile → annotate → dependence check → SMT-overlap gate →
+Relic restructuring — then the granularity bands of Figs. 1–2.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.bench_suite import BENCHMARKS
+from repro.core import Aira
+from repro.core.overlap_model import CPU_HW, OPENMP, RELIC, OverlapModel
+from repro.bench_suite import cc, pfl
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.fig34_aira import make_workload  # noqa: E402
+
+
+def main():
+    # 1) advise one benchmark ("Parallelize this program with Aira")
+    b = BENCHMARKS["GeoSpatial"]
+    data = b.build()
+    report = Aira(hw=CPU_HW).advise(make_workload(b, data))
+    print(report.render())
+    d = report.decisions[0]
+    if d.accepted:
+        got = np.asarray(d.parallel_fn())
+        want = np.asarray(jax.vmap(b.item_fn(data))(b.items(data)))
+        print(f"\nrestructured == serial: {np.allclose(got, want, atol=1e-4)}")
+        print(f"chosen schedule: {d.schedule.describe()}")
+
+    # 2) the granularity band (paper Figs. 1–2)
+    model = OverlapModel(CPU_HW)
+    print("\nCC kernel, speedup vs problem size (Relic on one SMT core):")
+    for n in (10, 50, 200, 1000):
+        g = max(4, n // 4)
+        from repro.core.overlap_model import Microtask
+        t0 = cc.microtask()
+        t = Microtask(t0.flops * g, t0.bytes * g, t0.chain * g, True)
+        p = model.predict(t, max(2, n // g))
+        print(f"  n={n:5d}: smt2 {p.gain('smt2')*100:+6.1f}%   smp2 {p.gain('smp2')*100:+6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

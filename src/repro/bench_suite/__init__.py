@@ -1,0 +1,15 @@
+"""The paper's 10 latency-critical benchmarks (§VI) in JAX, plus the
+granularity-sweep kernels of Figs. 1–2 (pfl, cc)."""
+from repro.bench_suite.common import BENCHMARKS, Benchmark, register  # noqa: F401
+from repro.bench_suite import (  # noqa: F401,E402
+    geospatial,
+    vwap,
+    lidar,
+    timeline,
+    rf,
+    onehop,
+    lob,
+    geoip,
+    fraud,
+    bvh,
+)

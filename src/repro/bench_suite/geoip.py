@@ -1,0 +1,96 @@
+"""H. IP Address Geolocation (paper §VI.H).
+
+Binary trie over IPv4 prefixes: each node tests one bit; longest-prefix
+match returns a location id. Items = a batch of IP lookups (paper: 10⁶
+per iteration; scaled to 8192 for CPU wall-clock runs — structure and
+per-item cost are unchanged).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench_suite.common import Benchmark, register
+
+N_PREFIXES = 4096
+N_IPS = 8192
+MAX_DEPTH = 24
+
+
+def build(seed=7):
+    rng = np.random.default_rng(seed)
+    # insert random prefixes (8..24 bits) into an array trie
+    left = [-1]
+    right = [-1]
+    value = [0]
+
+    def insert(prefix, plen, val):
+        node = 0
+        for d in range(plen):
+            bit = (prefix >> (31 - d)) & 1
+            child = right[node] if bit else left[node]
+            if child == -1:
+                left.append(-1)
+                right.append(-1)
+                value.append(value[node])
+                child = len(left) - 1
+                if bit:
+                    right[node] = child
+                else:
+                    left[node] = child
+            node = child
+        value[node] = val
+
+    for i in range(N_PREFIXES):
+        plen = int(rng.integers(8, MAX_DEPTH + 1))
+        prefix = int(rng.integers(0, 2**32)) & (~((1 << (32 - plen)) - 1))
+        insert(prefix, plen, int(rng.integers(1, 256)))
+
+    ips = rng.integers(0, 2**32, N_IPS, dtype=np.uint32).astype(np.int64)
+    return {
+        "left": jnp.asarray(np.asarray(left, np.int32)),
+        "right": jnp.asarray(np.asarray(right, np.int32)),
+        "value": jnp.asarray(np.asarray(value, np.int32)),
+        "ips": jnp.asarray(ips),
+    }
+
+
+def item_fn(data):
+    left, right, value = data["left"], data["right"], data["value"]
+
+    def fn(ip):
+        def step(carry, d):
+            node, best = carry
+            bit = (ip >> (31 - d)) & 1
+            nxt = jnp.where(bit == 1, right[jnp.maximum(node, 0)], left[jnp.maximum(node, 0)])
+            best = jnp.where(node >= 0, value[jnp.maximum(node, 0)], best)
+            node = jnp.where(node < 0, node, nxt)
+            return (node, best), None
+
+        (_, best), _ = jax.lax.scan(
+            step, (jnp.int32(0), jnp.int32(0)), jnp.arange(MAX_DEPTH)
+        )
+        return best
+
+    return fn
+
+
+def items(data):
+    return data["ips"]
+
+
+def cost(data):
+    return dict(flops=MAX_DEPTH * 3.0, bytes=MAX_DEPTH * 16.0, chain=MAX_DEPTH, vector=True)
+
+
+register(
+    Benchmark(
+        name="GeoIP",
+        domain="CDN / edge",
+        build=build,
+        items=items,
+        item_fn=item_fn,
+        cost=cost,
+    )
+)

@@ -1,0 +1,146 @@
+"""A. Geo-Spatial Database System (paper §VI.A).
+
+KD-tree range queries (iterative, stack-budgeted) → BST metadata lookup
+per hit → per-object linked-list metric aggregation. 2048 objects in a
+1000×1000 space, 15 concurrent 50×50 range queries per iteration, ≤32
+hits per query.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench_suite import common
+from repro.bench_suite.common import Benchmark, register
+from repro.core.deps import MemoryTrace
+
+N_OBJECTS = 2048
+N_QUERIES = 15
+RANGE = 50.0
+MAX_HITS = 32
+VISIT_BUDGET = 96
+BST_DEPTH = 12
+LIST_HOPS = 12
+
+
+def build(seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1000, (N_OBJECTS, 2)).astype(np.float32)
+    kd = common.build_kdtree(pts)
+    meta = common.build_bst(
+        keys=np.arange(N_OBJECTS, dtype=np.int32),
+        values=rng.integers(0, N_OBJECTS, N_OBJECTS).astype(np.int32),
+    )
+    lists = common.build_linked_lists(rng, N_OBJECTS, 4, LIST_HOPS - 2)
+    lo = rng.uniform(0, 1000 - RANGE, (N_QUERIES, 2)).astype(np.float32)
+    data = {
+        "kd": {k: jnp.asarray(v) for k, v in kd.items()},
+        "bst": {k: jnp.asarray(v) for k, v in meta.items()},
+        "lists": {k: jnp.asarray(v) for k, v in lists.items()},
+        "queries": jnp.concatenate([lo, lo + RANGE], axis=1),  # [Q, 4]
+        "_np": {"kd": kd, "queries": np.concatenate([lo, lo + RANGE], 1)},
+    }
+    return data
+
+
+def _range_query(kd, rect, budget=VISIT_BUDGET):
+    """Stack-budgeted KD range search → (hit ids [MAX_HITS], n_hits)."""
+    lo, hi = rect[:2], rect[2:]
+
+    def step(carry, _):
+        stack, sp, hits, nh = carry
+        has = sp > 0
+        node = jnp.where(has, stack[jnp.maximum(sp - 1, 0)], -1)
+        sp = jnp.where(has, sp - 1, sp)
+        nv = jnp.maximum(node, 0)
+        pt = kd["point"][nv]
+        ax = kd["axis"][nv]
+        inside = jnp.logical_and(jnp.all(pt >= lo), jnp.all(pt <= hi))
+        inside = jnp.logical_and(inside, node >= 0)
+        hits = jnp.where(
+            jnp.logical_and(inside, nh < MAX_HITS), hits.at[nh % MAX_HITS].set(nv), hits
+        )
+        nh = nh + inside.astype(jnp.int32)
+        # push children whose half-space intersects the rect
+        p_ax = pt[ax]
+        go_l = jnp.logical_and(node >= 0, lo[ax] <= p_ax)
+        go_r = jnp.logical_and(node >= 0, hi[ax] >= p_ax)
+        l, r = kd["left"][nv], kd["right"][nv]
+        push_l = jnp.logical_and(go_l, l >= 0)
+        stack = jnp.where(push_l, stack.at[sp].set(l), stack)
+        sp = sp + push_l.astype(jnp.int32)
+        push_r = jnp.logical_and(go_r, r >= 0)
+        stack = jnp.where(push_r, stack.at[sp].set(r), stack)
+        sp = sp + push_r.astype(jnp.int32)
+        return (stack, sp, hits, nh), None
+
+    stack0 = jnp.zeros((64,), jnp.int32).at[0].set(kd["root"])
+    hits0 = jnp.full((MAX_HITS,), -1, jnp.int32)
+    (_, _, hits, nh), _ = jax.lax.scan(
+        step, (stack0, jnp.int32(1), hits0, jnp.int32(0)), None, length=budget
+    )
+    return hits, jnp.minimum(nh, MAX_HITS)
+
+
+def item_fn(data):
+    kd, bst, lists = data["kd"], data["bst"], data["lists"]
+
+    def fn(rect):
+        hits, nh = _range_query(kd, rect)
+        valid = hits >= 0
+        obj = jnp.where(valid, kd["perm"][jnp.maximum(hits, 0)], 0)
+
+        def per_hit(o, v):
+            node = common.bst_lookup(bst, o, BST_DEPTH)
+            mv = jnp.where(node >= 0, bst["value"][jnp.maximum(node, 0)], 0)
+            s = common.list_sum(lists, lists["head"][jnp.minimum(mv, N_OBJECTS - 1)], LIST_HOPS)
+            return jnp.where(v, s, 0.0)
+
+        return jax.vmap(per_hit)(obj, valid).sum()
+
+    return fn
+
+
+def items(data):
+    return data["queries"]
+
+
+def cost(data):
+    # per query: ~96 tree visits + ≤32·(12 BST + 12 list) dependent hops
+    chain = VISIT_BUDGET + MAX_HITS * (BST_DEPTH + LIST_HOPS) // 2
+    return dict(flops=400.0, bytes=chain * 64.0, chain=chain, vector=True)
+
+
+def trace(data) -> MemoryTrace:
+    """Numpy mirror of the KD walk: records visited node ids per query
+    (the DynamoRIO load-trace analogue). Queries only read → no writes."""
+    kd = data["_np"]["kd"]
+    reads, writes = [], []
+    for rect in data["_np"]["queries"]:
+        lo, hi = rect[:2], rect[2:]
+        stack, visited = [int(kd["root"])], []
+        while stack and len(visited) < VISIT_BUDGET:
+            n = stack.pop()
+            visited.append(n)
+            pt, ax = kd["point"][n], int(kd["axis"][n])
+            if lo[ax] <= pt[ax] and kd["left"][n] >= 0:
+                stack.append(int(kd["left"][n]))
+            if hi[ax] >= pt[ax] and kd["right"][n] >= 0:
+                stack.append(int(kd["right"][n]))
+        reads.append(np.asarray(visited))
+        writes.append(np.asarray([], np.int64))
+    return MemoryTrace(reads=reads, writes=writes)
+
+
+register(
+    Benchmark(
+        name="GeoSpatial",
+        domain="geo-spatial database",
+        build=build,
+        items=items,
+        item_fn=item_fn,
+        cost=cost,
+        trace=trace,
+    )
+)

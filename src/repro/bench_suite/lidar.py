@@ -1,0 +1,94 @@
+"""C. Obstacle Detection System (paper §VI.C).
+
+3D KD-tree nearest-neighbour queries along a planned trajectory.
+1000 obstacles in a 60³ m volume, 100 waypoints at 0.2 m resolution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench_suite import common
+from repro.bench_suite.common import Benchmark, register
+
+N_OBST = 1000
+N_WAY = 100
+VISIT_BUDGET = 64
+
+
+def build(seed=2):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 60, (N_OBST, 3)).astype(np.float32)
+    kd = common.build_kdtree(pts)
+    start = rng.uniform(10, 50, (3,))
+    heading = rng.normal(size=3)
+    heading /= np.linalg.norm(heading)
+    way = (start[None] + 0.2 * np.arange(N_WAY)[:, None] * heading[None]).astype(
+        np.float32
+    )
+    return {"kd": {k: jnp.asarray(v) for k, v in kd.items()}, "way": jnp.asarray(way)}
+
+
+def _nn_query(kd, q):
+    """Stack-budgeted branch-and-bound NN: returns min squared distance."""
+
+    def step(carry, _):
+        stack, sp, best = carry
+        has = sp > 0
+        node = jnp.where(has, stack[jnp.maximum(sp - 1, 0)], -1)
+        sp = jnp.where(has, sp - 1, sp)
+        nv = jnp.maximum(node, 0)
+        pt = kd["point"][nv]
+        ax = kd["axis"][nv]
+        d2 = jnp.sum((pt - q) ** 2)
+        best = jnp.where(jnp.logical_and(node >= 0, d2 < best), d2, best)
+        diff = q[ax] - pt[ax]
+        near = jnp.where(diff < 0, kd["left"][nv], kd["right"][nv])
+        far = jnp.where(diff < 0, kd["right"][nv], kd["left"][nv])
+        # push far child only if its half-space can beat `best`
+        push_far = jnp.logical_and(
+            jnp.logical_and(node >= 0, far >= 0), diff * diff < best
+        )
+        stack = jnp.where(push_far, stack.at[sp].set(far), stack)
+        sp = sp + push_far.astype(jnp.int32)
+        push_near = jnp.logical_and(node >= 0, near >= 0)
+        stack = jnp.where(push_near, stack.at[sp].set(near), stack)
+        sp = sp + push_near.astype(jnp.int32)
+        return (stack, sp, best), None
+
+    stack0 = jnp.zeros((48,), jnp.int32).at[0].set(kd["root"])
+    (_, _, best), _ = jax.lax.scan(
+        step, (stack0, jnp.int32(1), jnp.float32(1e9)), None, length=VISIT_BUDGET
+    )
+    return best
+
+
+def item_fn(data):
+    kd = data["kd"]
+
+    def fn(waypoint):
+        return jnp.sqrt(_nn_query(kd, waypoint))
+
+    return fn
+
+
+def items(data):
+    return data["way"]
+
+
+def cost(data):
+    return dict(flops=VISIT_BUDGET * 12.0, bytes=VISIT_BUDGET * 64.0,
+                chain=VISIT_BUDGET, vector=True)
+
+
+register(
+    Benchmark(
+        name="LIDAR",
+        domain="autonomous vehicles",
+        build=build,
+        items=items,
+        item_fn=item_fn,
+        cost=cost,
+    )
+)

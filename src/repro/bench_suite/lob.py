@@ -1,0 +1,104 @@
+"""G. Limit Order Book (paper §VI.G).
+
+Multi-symbol matching engine: 256 symbols, each with a 100-level
+ascending price-level list holding per-level order queues; 500 order
+updates per symbol per iteration. Items = symbols (disjoint books →
+conflict-free across tasks; sequential chain within).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench_suite.common import Benchmark, register
+from repro.core.deps import MemoryTrace
+
+N_SYMBOLS = 256
+N_LEVELS = 100
+N_UPDATES = 500
+SEARCH_HOPS = 12  # skip-ish search budget per update
+
+
+def build(seed=6):
+    rng = np.random.default_rng(seed)
+    # per symbol: level order (sorted ascending) as next-pointers
+    nxt = np.tile(np.arange(1, N_LEVELS + 1, dtype=np.int32), (N_SYMBOLS, 1))
+    nxt[:, -1] = -1
+    qty = rng.integers(0, 50, (N_SYMBOLS, N_LEVELS)).astype(np.float32)
+    updates_price = rng.integers(0, N_LEVELS, (N_SYMBOLS, N_UPDATES)).astype(np.int32)
+    updates_qty = rng.integers(-5, 6, (N_SYMBOLS, N_UPDATES)).astype(np.float32)
+    return {
+        "nxt": jnp.asarray(nxt),
+        "qty": jnp.asarray(qty),
+        "up_p": jnp.asarray(updates_price),
+        "up_q": jnp.asarray(updates_qty),
+        "sym": jnp.arange(N_SYMBOLS, dtype=jnp.int32),
+        "_np": {"up_p": updates_price},
+    }
+
+
+def item_fn(data):
+    def fn(s):
+        nxt = data["nxt"][s]
+
+        def one_update(book, upd):
+            price, dq = upd
+
+            # linked search from best price toward `price` (bounded hops)
+            def hop(n, _):
+                nx = nxt[jnp.maximum(n, 0)]
+                ok = jnp.logical_and(nx >= 0, nx <= price)
+                return jnp.where(ok, nx, n), None
+
+            lvl, _ = jax.lax.scan(hop, jnp.int32(0), None, length=SEARCH_HOPS)
+            book = book.at[lvl].add(dq)
+            book = jnp.maximum(book, 0.0)
+            return book, None
+
+        book, _ = jax.lax.scan(
+            one_update, data["qty"][s], (data["up_p"][s], data["up_q"][s])
+        )
+        return book.sum()
+
+    return fn
+
+
+def items(data):
+    return data["sym"]
+
+
+def cost(data):
+    # per symbol: 500 sequential updates × bounded search chain
+    return dict(
+        flops=N_UPDATES * 8.0,
+        bytes=N_UPDATES * SEARCH_HOPS * 16.0,
+        chain=N_UPDATES * SEARCH_HOPS // 4,
+        vector=True,
+    )
+
+
+def trace(data) -> MemoryTrace:
+    """Writes = (symbol, level) slots each task updates — disjoint across
+    symbols, the conflict-free case the paper's checker must PASS."""
+    up_p = data["_np"]["up_p"]
+    reads, writes = [], []
+    for s in range(N_SYMBOLS):
+        lv = np.unique(up_p[s])
+        addr = s * N_LEVELS + lv
+        reads.append(addr)
+        writes.append(addr)
+    return MemoryTrace(reads=reads, writes=writes)
+
+
+register(
+    Benchmark(
+        name="LOB",
+        domain="high-frequency trading",
+        build=build,
+        items=items,
+        item_fn=item_fn,
+        cost=cost,
+        trace=trace,
+    )
+)

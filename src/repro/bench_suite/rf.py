@@ -1,0 +1,77 @@
+"""E. Random Forest (paper §VI.E).
+
+256 binary decision trees of depth 5 as linked node structures;
+32-feature input vector; ensemble average.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench_suite.common import Benchmark, register
+
+N_TREES = 256
+DEPTH = 5
+N_FEAT = 32
+N_NODES = 2 ** (DEPTH + 1) - 1  # full binary tree, 63 nodes
+
+
+def build(seed=4):
+    rng = np.random.default_rng(seed)
+    feat = rng.integers(0, N_FEAT, (N_TREES, N_NODES)).astype(np.int32)
+    thr = rng.normal(size=(N_TREES, N_NODES)).astype(np.float32)
+    leaf = rng.normal(size=(N_TREES, N_NODES)).astype(np.float32)
+    # children laid out randomly (pointer-style, not implicit heap order)
+    left = np.zeros((N_TREES, N_NODES), np.int32)
+    right = np.zeros((N_TREES, N_NODES), np.int32)
+    root = np.zeros((N_TREES,), np.int32)
+    for t in range(N_TREES):
+        perm = rng.permutation(N_NODES).astype(np.int32)
+        heap_l = np.where(2 * np.arange(N_NODES) + 1 < N_NODES, 2 * np.arange(N_NODES) + 1, 0)
+        heap_r = np.where(2 * np.arange(N_NODES) + 2 < N_NODES, 2 * np.arange(N_NODES) + 2, 0)
+        inv = np.argsort(perm)
+        left[t][perm] = perm[heap_l]
+        right[t][perm] = perm[heap_r]
+        root[t] = perm[0]
+    x = rng.normal(size=(N_FEAT,)).astype(np.float32)
+    return {
+        "feat": jnp.asarray(feat), "thr": jnp.asarray(thr), "leaf": jnp.asarray(leaf),
+        "left": jnp.asarray(left), "right": jnp.asarray(right),
+        "root": jnp.asarray(root), "x": jnp.asarray(x),
+        "tree_ids": jnp.arange(N_TREES, dtype=jnp.int32),
+    }
+
+
+def item_fn(data):
+    x = data["x"]
+
+    def fn(t):
+        def step(node, _):
+            go_left = x[data["feat"][t, node]] < data["thr"][t, node]
+            return jnp.where(go_left, data["left"][t, node], data["right"][t, node]), None
+
+        node, _ = jax.lax.scan(step, data["root"][t], None, length=DEPTH)
+        return data["leaf"][t, node]
+
+    return fn
+
+
+def items(data):
+    return data["tree_ids"]
+
+
+def cost(data):
+    return dict(flops=DEPTH * 4.0, bytes=DEPTH * 128.0, chain=DEPTH, vector=True)
+
+
+register(
+    Benchmark(
+        name="RF",
+        domain="recommendation / ML serving",
+        build=build,
+        items=items,
+        item_fn=item_fn,
+        cost=cost,
+    )
+)

@@ -1,0 +1,29 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cell_is_runnable,
+    cells,
+    get_config,
+    get_shape,
+    list_configs,
+    pad_to_multiple,
+    register,
+)
+
+# Importing each module registers its config.
+from repro.configs import (  # noqa: F401,E402
+    musicgen_large,
+    zamba2_2p7b,
+    dbrx_132b,
+    granite_moe_1b,
+    smollm_135m,
+    phi3_medium_14b,
+    stablelm_3b,
+    internlm2_20b,
+    mamba2_370m,
+    internvl2_2b,
+)
+
+ALL_ARCHS = list_configs()

@@ -1,0 +1,27 @@
+"""zamba2-2.7b [hybrid]: Mamba2 backbone + shared attention block.
+
+54L d_model=2560 32H (GQA kv=32) d_ff=10240 vocab=32000 ssm_state=64
+[arXiv:2411.15242; hf]. One attention block with *shared weights* is applied
+every 6th layer (per-site KV caches). Sub-quadratic → runs long_500k.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        num_layers=54,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=10240,  # used by the shared block's MLP
+        vocab_size=32000,
+        ssm_state=64,
+        attn_every=6,
+        sub_quadratic=True,
+        kv_quant=True,
+        tie_embeddings=True,
+        train_accum=16,
+        param_sharding="tp",
+    )
+)

@@ -1,0 +1,11 @@
+"""Aira core: the paper's contribution as a composable JAX module."""
+from repro.core.adviser import AdviceReport, Aira, Region, Workload  # noqa: F401
+from repro.core.overlap_model import (  # noqa: F401
+    HwModel,
+    Microtask,
+    OverlapModel,
+    SchedulePrediction,
+    gate,
+)
+from repro.core.profiler import ProfiledStep, RooflineTerms, profile_step  # noqa: F401
+from repro.core.relic import RelicSchedule, choose_schedule, relic_pfor  # noqa: F401

@@ -1,0 +1,179 @@
+"""Dependence analysis: static (jaxpr) + dynamic (recorded access traces).
+
+The paper checks every annotated region twice before parallelizing:
+BOLT-based *static* dependence analysis over the binary, and *dynamic*
+memory-access conflict detection over DynamoRIO load/store traces. The
+JAX translation:
+
+static  — walk the region's jaxpr with *provenance tracking*: a scatter
+          into an argument-derived array is the analogue of a shared-
+          memory write (demands a dynamic trace); a scatter into a
+          locally-created buffer is a private stack write (safe). Loop-
+          carried values (scan/while carries) are recorded — they
+          serialize *within* a work item but do not block across-item
+          parallelism for a pure per-item region.
+dynamic — replay the region's recorded gather/scatter index sets under
+          the proposed task partition and reject on any cross-task
+          write↔read/write overlap (``check_conflicts``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+SCATTER_PRIMS = {
+    "scatter",
+    "scatter-add",
+    "scatter_add",
+    "scatter_mul",
+    "scatter_min",
+    "scatter_max",
+    "scatter_apply",
+    "dynamic_update_slice",
+}
+GATHER_PRIMS = {"gather", "dynamic_slice", "take", "take_along_axis"}
+
+
+@dataclass
+class StaticReport:
+    n_eqns: int = 0
+    gathers: int = 0
+    scatters: int = 0
+    shared_scatters: int = 0  # writes into argument-derived arrays
+    loops: int = 0
+    loop_carried: int = 0
+    prims: dict = field(default_factory=dict)
+
+    @property
+    def trivially_parallel(self) -> bool:
+        """No writes into shared (argument-derived) state → the region can
+        be partitioned across items without a dynamic trace."""
+        return self.shared_scatters == 0
+
+    def summary(self) -> str:
+        return (
+            f"eqns={self.n_eqns} gathers={self.gathers} "
+            f"scatters={self.scatters} shared_writes={self.shared_scatters} "
+            f"loops={self.loops} carried={self.loop_carried} "
+            f"parallel={'yes' if self.trivially_parallel else 'needs-trace'}"
+        )
+
+
+def _sub_jaxprs(eqn):
+    """(closed_jaxpr, outer_invars_for_body) pairs for control-flow prims."""
+    name = eqn.primitive.name
+    p = eqn.params
+    out = []
+    if name == "scan":
+        nc, nk = p.get("num_consts", 0), p.get("num_carry", 0)
+        body = p["jaxpr"]
+        out.append((body, list(eqn.invars)))
+    elif name == "while":
+        # const/carry split differs between cond and body: be conservative
+        out.append((p["body_jaxpr"], None))
+        out.append((p["cond_jaxpr"], None))
+    elif name == "cond":
+        for br in p["branches"]:
+            out.append((br, list(eqn.invars)[1:]))
+    elif "jaxpr" in p and hasattr(p["jaxpr"], "jaxpr"):
+        out.append((p["jaxpr"], list(eqn.invars)))
+    return out
+
+
+# primitives whose result would ALIAS operand storage in the C original
+# (pointer into the structure / in-place update); everything else copies
+_ALIAS_OP0 = {
+    "reshape", "transpose", "squeeze", "rev", "slice", "broadcast_in_dim",
+    "dynamic_slice", "gather",
+} | SCATTER_PRIMS
+_ALIAS_ANY = {"select_n"}
+
+
+def _walk(jaxpr, shared_vars: set, rep: StaticReport):
+    """shared_vars: vars that alias region-argument/closure storage. A
+    scatter into aliased storage is a shared-memory write (needs a
+    dynamic trace); a scatter into a locally-allocated buffer (zeros,
+    arithmetic results) is a private stack write."""
+    shared = set(shared_vars)
+
+    def is_shared(v):
+        return (not hasattr(v, "val")) and v in shared
+
+    for eqn in jaxpr.eqns:
+        rep.n_eqns += 1
+        name = eqn.primitive.name
+        rep.prims[name] = rep.prims.get(name, 0) + 1
+        if name in GATHER_PRIMS:
+            rep.gathers += 1
+        if name in SCATTER_PRIMS:
+            rep.scatters += 1
+            if eqn.invars and is_shared(eqn.invars[0]):
+                rep.shared_scatters += 1
+        if name in ("scan", "while"):
+            rep.loops += 1
+            rep.loop_carried += eqn.params.get("num_carry", len(eqn.outvars))
+        for closed, outer_vars in _sub_jaxprs(eqn):
+            inner = closed.jaxpr
+            if outer_vars is None:  # conservative: everything shared
+                inner_shared = set(inner.invars)
+            else:
+                inner_shared = set()
+                for iv, ov in zip(inner.invars, outer_vars[: len(inner.invars)]):
+                    if is_shared(ov):
+                        inner_shared.add(iv)
+            _walk(inner, inner_shared, rep)
+        # alias propagation
+        if name in _ALIAS_OP0 and eqn.invars and is_shared(eqn.invars[0]):
+            shared.update(eqn.outvars)
+        elif name in _ALIAS_ANY and any(is_shared(v) for v in eqn.invars):
+            shared.update(eqn.outvars)
+
+
+def static_deps(fn, *sample_args, **kw) -> StaticReport:
+    closed = jax.make_jaxpr(fn, **kw)(*sample_args)
+    rep = StaticReport()
+    shared = set(closed.jaxpr.invars) | set(closed.jaxpr.constvars)
+    _walk(closed.jaxpr, shared, rep)
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# dynamic traces
+
+
+@dataclass
+class MemoryTrace:
+    """Recorded dynamic accesses of one region execution (per work item).
+
+    reads/writes: list over work items of integer index arrays — the
+    DynamoRIO load/store trace analogue, in element-index space.
+    """
+
+    reads: list
+    writes: list
+
+    @property
+    def n_items(self) -> int:
+        return len(self.reads)
+
+
+def check_conflicts(trace: MemoryTrace, n_tasks: int) -> tuple[bool, str]:
+    """Partition work items round-robin into n_tasks; conflict iff some
+    task writes an index another task reads or writes."""
+    n = trace.n_items
+    writes_by_task = [set() for _ in range(n_tasks)]
+    reads_by_task = [set() for _ in range(n_tasks)]
+    for i in range(n):
+        t = i % n_tasks
+        writes_by_task[t].update(np.asarray(trace.writes[i]).ravel().tolist())
+        reads_by_task[t].update(np.asarray(trace.reads[i]).ravel().tolist())
+    for t in range(n_tasks):
+        for u in range(n_tasks):
+            if t == u:
+                continue
+            inter = writes_by_task[t] & (reads_by_task[u] | writes_by_task[u])
+            if inter:
+                return True, f"W/R conflict tasks {t}↔{u} on {len(inter)} addresses"
+    return False, "no cross-task conflicts"

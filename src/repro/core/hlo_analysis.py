@@ -1,0 +1,148 @@
+"""Compiled-HLO analysis: collective bytes, op-class histogram, hotspots.
+
+This is the tooling layer the paper builds on BOLT: instead of x86 binary
+analysis we parse the SPMD-partitioned HLO of a compiled XLA executable.
+All byte counts are *per device* (SPMD: every device runs the same
+program on its shard).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# bytes a ring implementation moves through each chip's ICI links, as a
+# multiple of the instruction's per-device payload size
+_RING_FACTOR = {
+    "all-gather": 1.0,       # receives (n-1)/n of result ≈ result bytes
+    "all-reduce": 2.0,       # reduce-scatter + all-gather phases
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_DTYPE_BYTES[d] * _numel(dims) for d, dims in _SHAPE_RE.findall(text))
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+    bytes_by_op: dict = field(default_factory=lambda: defaultdict(float))
+    bytes_total: float = 0.0
+    instructions: list = field(default_factory=list)
+
+    def summary(self) -> str:
+        parts = [
+            f"{op}×{self.counts[op]}={self.bytes_by_op[op]/2**20:.1f}MiB"
+            for op in sorted(self.counts)
+        ]
+        return f"total={self.bytes_total/2**20:.1f}MiB  " + "  ".join(parts)
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device ICI bytes of every collective in a compiled HLO module.
+
+    For each collective instruction we take the *result* shapes (per-device
+    shard sizes in SPMD HLO) times a ring-schedule factor.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for op in COLLECTIVE_OPS:
+            # match the op as the instruction name: "... op(" or "... op-start("
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                # result shapes appear before the op name
+                head = rhs.split(op)[0]
+                nbytes = _shapes_bytes(head) * _RING_FACTOR[op]
+                stats.counts[op] += 1
+                stats.bytes_by_op[op] += nbytes
+                stats.bytes_total += nbytes
+                stats.instructions.append((op, nbytes, line[:160]))
+                break
+    return stats
+
+
+@dataclass
+class OpStats:
+    """Rough per-op-class byte/flop attribution from HLO (hotspot ranking)."""
+
+    flops_by_op: dict = field(default_factory=lambda: defaultdict(float))
+    bytes_by_op: dict = field(default_factory=lambda: defaultdict(float))
+
+    def hotspots(self, peak_flops: float, hbm_bw: float, top: int = 10):
+        """Rank op classes by modeled time = max(flop-time, byte-time)."""
+        t = {}
+        for op in set(self.flops_by_op) | set(self.bytes_by_op):
+            t[op] = max(
+                self.flops_by_op.get(op, 0.0) / peak_flops,
+                self.bytes_by_op.get(op, 0.0) / hbm_bw,
+            )
+        return sorted(t.items(), key=lambda kv: -kv[1])[:top]
+
+
+_DOT_RE = re.compile(r"dot\(|convolution\(")
+
+
+def op_stats(hlo_text: str) -> OpStats:
+    """Walk HLO instructions; attribute dot FLOPs and all I/O bytes.
+
+    dot flops: 2 · numel(result) · contracted-dim (parsed from the
+    dot_dimension_numbers operand shapes when present; else estimated from
+    operand sizes).
+    """
+    stats = OpStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", line)
+        if not m or " = " in line and line.startswith("ROOT tuple"):
+            continue
+        rhs = m.group(1)
+        om = re.match(r"(?:\(?[\w\[\],\s]*\)?\s*)?([a-z][\w\-]*)\(", rhs)
+        shapes = _SHAPE_RE.findall(rhs)
+        if not shapes:
+            continue
+        opname = om.group(1) if om else "unknown"
+        result_b = _DTYPE_BYTES[shapes[0][0]] * _numel(shapes[0][1])
+        all_b = sum(_DTYPE_BYTES[d] * _numel(n) for d, n in shapes)
+        stats.bytes_by_op[opname] += all_b
+        if opname in ("dot", "convolution") and len(shapes) >= 3:
+            res_n = _numel(shapes[0][1])
+            lhs_n = _numel(shapes[1][1])
+            rhs_n = _numel(shapes[2][1])
+            # contracted size ≈ sqrt(lhs·rhs/res) for plain matmul
+            k = max(1.0, (lhs_n * rhs_n / max(res_n, 1)) ** 0.5)
+            stats.flops_by_op[opname] += 2.0 * res_n * k
+    return stats

@@ -1,0 +1,216 @@
+"""SMT-aware dual-stream performance simulator (the Sniper analogue).
+
+The paper extends Sniper to predict whether co-scheduling a pair of
+fine-grained task streams onto one SMT core is profitable, and *gates*
+parallelization on that prediction (§V — the Fraud benchmark is rejected
+here). This module is the analytical equivalent, with the resource
+physics that actually drive the paper's observations:
+
+* A single thread of a latency-critical kernel leaves resources idle in
+  two ways: **dependent-access stalls** (pointer chasing — the chain of
+  ``chain`` serialized memory latencies per task) and **ILP slack**
+  (``ilp_eff`` < 1: one thread cannot fill all issue ports).
+* Co-scheduling a second stream hides chain stalls and fills ports, but
+  *shared* resources (FU throughput, DRAM/HBM bandwidth) are not
+  duplicated, and the pair contends (``contention``).
+
+Per-schedule wall-time for n microtasks (c = FLOP time at full issue,
+c_s = c/ilp_eff single-thread, m_lat = chain·mem_latency, m_bw =
+bytes/bandwidth):
+
+  serial : n·(c_s + m_lat + m_bw)
+  smt2   : max( (n/2)·(c_s+m_lat+m_bw)·(1+φ),   ← per-stream chain
+                n·c·(1+φ),                       ← shared issue ports
+                n·m_bw )                         ← shared bandwidth
+           + n·o_task + o_region
+  smp2   : max( (n/2)·(c_s+m_lat+m_bw), n·m_bw )
+           + n·o_task·xcore_penalty + o_region_smp
+
+The granularity band of the paper's Figs. 1–2 falls out of the o-terms
+(below the band dispatch dominates) and of φ (above it two full cores
+beat one contended core).
+
+TPU translation (DESIGN.md §2): the stream pair is DMA vs MXU on one
+TensorCore; `serial` is the unpipelined kernel, `smt2` the double-
+buffered Pallas schedule, `smp2` splitting across two cores; `chain`
+models dependent HBM gathers (the linked-structure traversals of the
+paper's benchmarks).
+
+Runtime presets: Relic's dispatch is ~100 ns (the paper's enabling
+observation); an OpenMP-style runtime pays ~5× that per task plus a
+microsecond-scale region fork/join.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class HwModel:
+    peak_flops: float = 197e12  # bf16 MXU, per chip
+    vpu_flops: float = 4e12  # vector/scalar math (gather-heavy regions)
+    hbm_bw: float = 819e9  # bytes/s
+    ici_bw: float = 50e9  # bytes/s per link
+    mem_latency: float = 400e-9  # dependent random-access latency
+    ilp_eff: float = 0.88  # single-stream issue-port utilization
+    contention: float = 0.08  # residual overhead on shared-resource floors
+    pair_contention: float = 0.55  # per-stream slowdown when co-scheduled
+    bw_contention: float = 0.15  # interleaved-stream bandwidth loss
+    mlp_eff: float = 0.40  # extra memory-level parallelism the 2nd stream
+    # can actually extract (latency floor = m_lat/(1+mlp_eff))
+    xcore_penalty: float = 3.0  # cross-core task handoff vs same-core
+    smp_setup: float = 1.5e-6  # waking/pinning the second physical core
+    fill_depth: int = 2  # pipeline fill (double buffering)
+
+
+@dataclass(frozen=True)
+class RuntimeModel:
+    name: str
+    o_task: float  # per-microtask dispatch
+    o_region: float  # parallel-region entry/exit (fork/join)
+
+
+RELIC = RuntimeModel("relic", o_task=100e-9, o_region=50e-9)
+OPENMP = RuntimeModel("openmp", o_task=500e-9, o_region=800e-9)
+
+# The paper's evaluation machine (i7-12700 P-core, DDR5): used by the
+# bench_suite figure reproduction. The default HwModel above is TPU v5e —
+# used when the adviser prices LM-scale kernels.
+CPU_HW = HwModel(
+    peak_flops=50e9,  # one P-core, AVX2 FMA
+    vpu_flops=6e9,  # scalar/branchy pointer-chasing code
+    hbm_bw=30e9,  # single-core DRAM streaming
+    ici_bw=0.0,
+    mem_latency=80e-9,  # DDR5 random access
+    ilp_eff=0.88,
+    contention=0.08,
+    xcore_penalty=3.0,
+)
+
+
+@dataclass(frozen=True)
+class Microtask:
+    """One fine-grained task: FLOPs, streamed bytes, dependent-access chain."""
+
+    flops: float
+    bytes: float
+    chain: int = 0  # serialized dependent memory accesses (tree hops)
+    vector: bool = False  # VPU-bound (gather/pointer-chase) vs MXU
+
+
+@dataclass
+class SchedulePrediction:
+    serial: float
+    smt2: float
+    smp2: float
+
+    @property
+    def best(self) -> str:
+        t = {"serial": self.serial, "smt2": self.smt2, "smp2": self.smp2}
+        return min(t, key=t.get)
+
+    def gain(self, schedule: str) -> float:
+        """Relative speedup of `schedule` over serial (paper Figs. 1–4)."""
+        t = {"smt2": self.smt2, "smp2": self.smp2, "serial": self.serial}[schedule]
+        return self.serial / t - 1.0
+
+
+class OverlapModel:
+    def __init__(self, hw: HwModel | None = None, runtime: RuntimeModel = RELIC):
+        self.hw = hw or HwModel()
+        self.runtime = runtime
+
+    # ------------------------------------------------------------------
+    def _components(self, task: Microtask):
+        hw = self.hw
+        c = task.flops / (hw.vpu_flops if task.vector else hw.peak_flops)
+        c_s = c / hw.ilp_eff
+        m_lat = task.chain * hw.mem_latency
+        m_bw = task.bytes / hw.hbm_bw
+        return c, c_s, m_lat, m_bw
+
+    def predict(
+        self, task: Microtask, n_tasks: int, runtime: RuntimeModel | None = None
+    ) -> SchedulePrediction:
+        """Wall time of each schedule = max over binding resource bounds
+        (per-stream chain, shared issue ports, shared bandwidth, finite
+        memory-level parallelism) + dispatch overheads (docstring above)."""
+        hw, rt = self.hw, runtime or self.runtime
+        n = n_tasks
+        c, c_s, m_lat, m_bw = self._components(task)
+        per = c_s + m_lat + m_bw
+
+        serial = n * per
+
+        fill = hw.fill_depth * min(c_s, m_lat + m_bw)  # pipeline warmup
+        smt2 = (
+            max(
+                (n / 2) * per * (1 + hw.pair_contention),  # per-stream chain
+                n * c * (1 + hw.contention),  # shared issue ports
+                n * m_bw * (1 + hw.bw_contention),  # shared bandwidth
+                n * m_lat / (1 + hw.mlp_eff) * (1 + hw.contention),  # MLP cap
+            )
+            + n * rt.o_task
+            + rt.o_region
+            + fill
+        )
+        smp2 = (
+            max(math.ceil(n / 2) * per, n * m_bw)
+            + n * rt.o_task * hw.xcore_penalty
+            + rt.o_region * hw.xcore_penalty
+            + hw.smp_setup
+        )
+        return SchedulePrediction(serial=serial, smt2=smt2, smp2=smp2)
+
+    # ------------------------------------------------------------------
+    def granularity_sweep(
+        self, base: Microtask, total_items: int, grans, runtime=None
+    ):
+        """Speedup-vs-granularity curves (reproduces paper Figs. 1–2).
+
+        granularity g groups g items into one microtask: n = total/g tasks
+        each g× the base cost. (Grouping amortizes dispatch but does not
+        change resource totals — exactly the paper's sweep.)
+        """
+        rows = []
+        for g in grans:
+            task = Microtask(
+                flops=base.flops * g,
+                bytes=base.bytes * g,
+                chain=base.chain * g,
+                vector=base.vector,
+            )
+            n = max(1, total_items // g)
+            p = self.predict(task, n, runtime)
+            rows.append(
+                {
+                    "granularity": g,
+                    "smt_gain": p.gain("smt2"),
+                    "smp_gain": p.gain("smp2"),
+                    "serial_us": p.serial * 1e6,
+                }
+            )
+        return rows
+
+    def profitable_band(self, base: Microtask, total_items: int):
+        """Granularity range where smt2 beats BOTH serial and smp2 —
+        the paper's primary target (§IV)."""
+        lo, hi = None, None
+        g = 1
+        while g <= total_items:
+            task = Microtask(base.flops * g, base.bytes * g, base.chain * g, base.vector)
+            p = self.predict(task, max(1, total_items // g))
+            if p.smt2 < p.serial and p.smt2 <= p.smp2:
+                lo = g if lo is None else lo
+                hi = g
+            g *= 2
+        return lo, hi
+
+
+def gate(prediction: SchedulePrediction, threshold: float = 0.02) -> tuple[bool, str]:
+    """The Sniper gate: accept only if predicted smt2 gain > threshold."""
+    g = prediction.gain("smt2")
+    if g > threshold:
+        return True, f"accepted: predicted +{g*100:.1f}%"
+    return False, f"rejected: predicted {g*100:+.1f}% ≤ {threshold*100:.0f}% gate"

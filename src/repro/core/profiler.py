@@ -1,0 +1,142 @@
+"""Hotspot detection from compiled XLA artifacts (perf + LBR analogue).
+
+``profile_step`` lowers+compiles a jitted step (optionally under a mesh)
+and packages FLOPs/bytes/collective-bytes plus roofline terms — the
+"sampled profile in JSON" the paper's wrapper tool feeds the LLM.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+
+from repro.core import hlo_analysis, hlo_cost
+from repro.core.overlap_model import HwModel
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        t = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(t, key=t.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline-optimal step time = max of the three terms (perfect
+        overlap of the other two)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+
+@dataclass
+class ProfiledStep:
+    name: str
+    flops: float  # per device
+    bytes_accessed: float  # per device
+    collectives: hlo_analysis.CollectiveStats
+    ops: hlo_analysis.OpStats
+    memory_stats: Any
+    terms: RooflineTerms
+    hlo_size: int = 0
+    compiled: Any = None
+
+    def hotspots(self, hw: HwModel | None = None, top=10):
+        hw = hw or HwModel()
+        return self.ops.hotspots(hw.peak_flops, hw.hbm_bw, top)
+
+    def report(self) -> dict:
+        return {
+            "name": self.name,
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collectives.bytes_total,
+            "roofline": {
+                "compute_s": self.terms.compute_s,
+                "memory_s": self.terms.memory_s,
+                "collective_s": self.terms.collective_s,
+                "dominant": self.terms.dominant,
+            },
+            "collectives": dict(self.collectives.counts),
+            "hotspots": [
+                {"op": op, "modeled_s": t} for op, t in self.hotspots()
+            ],
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.report(), indent=2, default=float)
+
+
+def profile_step(
+    fn,
+    *abstract_args,
+    name: str = "step",
+    mesh=None,
+    in_shardings=None,
+    out_shardings=None,
+    donate_argnums=(),
+    hw: HwModel | None = None,
+    static_argnames=None,
+    keep_compiled: bool = False,
+    **abstract_kwargs,
+) -> ProfiledStep:
+    """Lower + compile; derive per-device roofline terms (DESIGN.md §6)."""
+    hw = hw or HwModel()
+    kw = {}
+    if in_shardings is not None:
+        kw["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kw["out_shardings"] = out_shardings
+    if donate_argnums:
+        kw["donate_argnums"] = donate_argnums
+    if static_argnames:
+        kw["static_argnames"] = static_argnames
+    jitted = jax.jit(fn, **kw)
+    if mesh is not None:
+        with mesh:
+            lowered = jitted.lower(*abstract_args, **abstract_kwargs)
+            compiled = lowered.compile()
+    else:
+        lowered = jitted.lower(*abstract_args, **abstract_kwargs)
+        compiled = lowered.compile()
+
+    text = compiled.as_text()
+    tc = hlo_cost.analyze(text)  # trip-count-aware costs
+    flops = tc.flops
+    nbytes = tc.bytes
+    colls = hlo_analysis.CollectiveStats()
+    colls.counts.update({k: int(v) for k, v in tc.collective_counts.items()})
+    colls.bytes_by_op.update(tc.collective_by_op)
+    colls.bytes_total = tc.collective_bytes
+    ops = hlo_analysis.op_stats(text)
+    mem = compiled.memory_analysis()
+
+    terms = RooflineTerms(
+        compute_s=flops / hw.peak_flops,
+        memory_s=nbytes / hw.hbm_bw,
+        collective_s=colls.bytes_total / hw.ici_bw,
+    )
+    return ProfiledStep(
+        name=name,
+        flops=flops,
+        bytes_accessed=nbytes,
+        collectives=colls,
+        ops=ops,
+        memory_stats=mem,
+        terms=terms,
+        hlo_size=len(text),
+        compiled=compiled if keep_compiled else None,
+    )

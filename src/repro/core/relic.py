@@ -1,0 +1,134 @@
+"""Relic runtime analogue: fine-grained microtask partitioning + paired
+stream co-scheduling, expressed in JAX.
+
+The original Relic [Los & Petushkov 2024] is a task-parallel runtime whose
+dispatch is cheap enough (~100 ns) to pay off at microsecond-kernel
+granularity on the two hardware threads of one SMT core. The TPU-native
+re-expression (DESIGN.md §2):
+
+  relic_pfor     — split an item-parallel region into `n_streams`
+                   interleaved chunk streams; chunk size = the task
+                   granularity. Lowered as a batched (vmap) dimension over
+                   streams × a sequential scan over chunks — i.e. the same
+                   compute restructured so a co-scheduling substrate
+                   (Pallas grid / XLA async pair) can overlap the streams.
+  RelicSchedule  — the chosen (granularity, n_streams, strategy) +
+                   the overlap model's prediction; attached to restructured
+                   regions so reports can show *why* a kernel was accepted.
+
+The 20 usage examples the paper feeds its LLM live in core/spec.py
+(RELIC_EXAMPLES) and double as doctests exercised by the test suite.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.overlap_model import Microtask, OverlapModel, SchedulePrediction
+
+
+@dataclass
+class RelicSchedule:
+    granularity: int
+    n_streams: int
+    strategy: str  # "smt2" | "smp2" | "serial"
+    prediction: Optional[SchedulePrediction] = None
+
+    def describe(self) -> str:
+        p = self.prediction
+        gain = f" predicted {p.gain(self.strategy)*100:+.1f}%" if p and self.strategy != "serial" else ""
+        return f"{self.strategy}(gran={self.granularity}, streams={self.n_streams}){gain}"
+
+
+def relic_pfor(
+    fn: Callable,
+    xs,
+    *,
+    granularity: int,
+    n_streams: int = 2,
+    combine: str = "stack",
+):
+    """Item-parallel region → co-scheduled chunk streams.
+
+    fn: per-item function (vmap-able). xs: leading-axis item array(s).
+    Items are grouped into chunks of `granularity`; chunks are dealt
+    round-robin to `n_streams` streams (the SMT thread pair); each stream
+    processes its chunks sequentially (lax.scan = the Relic task queue),
+    streams are batched (vmap = co-scheduled).
+
+    Returns results in the original item order.
+    """
+    leaves = jax.tree.leaves(xs)
+    n = leaves[0].shape[0]
+    g = max(1, min(granularity, n))
+    n_chunks = n // g
+    if n_chunks % n_streams or n % g:
+        # pad items to streams×granularity boundary
+        target = ((n + g * n_streams - 1) // (g * n_streams)) * g * n_streams
+        pad = target - n
+        xs = jax.tree.map(
+            lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], axis=0),
+            xs,
+        )
+        n_chunks = target // g
+
+    per_stream = n_chunks // n_streams
+    # [n_items,...] → [n_streams, per_stream, g, ...] (round-robin deal)
+    def deal(a):
+        a = a.reshape(n_chunks, g, *a.shape[1:])
+        return a.reshape(per_stream, n_streams, g, *a.shape[2:]).swapaxes(0, 1)
+
+    xs_dealt = jax.tree.map(deal, xs)
+
+    def stream_fn(stream_chunks):  # sequential task queue of one stream
+        def step(_, chunk):
+            return None, jax.vmap(fn)(chunk)
+
+        _, ys = jax.lax.scan(step, None, stream_chunks)
+        return ys
+
+    ys = jax.vmap(stream_fn)(xs_dealt)  # co-scheduled streams
+
+    # undo the deal: [streams, per_stream, g, ...] → [n_items, ...]
+    def undeal(a):
+        a = a.swapaxes(0, 1).reshape(n_chunks * g, *a.shape[3:])
+        return a[:n]
+
+    return jax.tree.map(undeal, ys)
+
+
+def choose_schedule(
+    model: OverlapModel,
+    task_flops: float,
+    task_bytes: float,
+    n_items: int,
+    *,
+    chain: int = 0,
+    vector: bool = False,
+    granularities=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
+    strategies=("smt2",),
+) -> RelicSchedule:
+    """Pick the best (granularity, strategy) under the overlap model —
+    what the paper's LLM does with the Sniper tool output. The default
+    strategy set is smt2 only: the paper's premise is that the heavy
+    threads of a latency-critical app own the physical cores, so only
+    the sibling hardware thread is available (pass smp2 to widen).
+    Granularity is capped at n/4 so at least two tasks per stream exist
+    to pipeline."""
+    best = None
+    for g in granularities:
+        if g > max(1, n_items // 4):
+            break
+        t = Microtask(task_flops * g, task_bytes * g, chain=chain * g, vector=vector)
+        p = model.predict(t, max(1, n_items // g))
+        for strat in strategies:
+            tt = getattr(p, strat)
+            if best is None or tt < best[0]:
+                best = (tt, g, strat, p)
+    tt, g, strat, p = best
+    if p.serial <= tt:
+        return RelicSchedule(granularity=n_items, n_streams=1, strategy="serial", prediction=p)
+    return RelicSchedule(granularity=g, n_streams=2, strategy=strat, prediction=p)

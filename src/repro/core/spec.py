@@ -1,0 +1,128 @@
+"""The Aira specification file (§V.2 of the paper), machine-readable.
+
+The paper ships a Markdown spec that an MCP tool loads into the LLM's
+context; it describes the end-to-end flow ("Parallelize this program with
+Aira") and embeds 20 worked examples of the Relic API so a general-purpose
+model can restructure code onto a custom framework. Here the spec is a
+dataclass the (deterministic) adviser executes stage by stage, and the 20
+examples are *runnable* — the test suite asserts each one restructures
+correctly under ``relic_pfor`` (i.e. matches its vmap semantics).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PROMPT = "Parallelize this program with Aira"
+
+
+@dataclass(frozen=True)
+class Stage:
+    name: str
+    tool: str
+    description: str
+    reject_on: Optional[str] = None
+
+
+AIRA_SPEC = (
+    Stage(
+        "profile",
+        "core.profiler.profile_step",
+        "Collect a sampled profile (perf+LBR analogue: compiled-HLO cost "
+        "analysis); emit hot functions ranked by modeled time.",
+    ),
+    Stage(
+        "annotate",
+        "core.adviser.Aira.annotate",
+        "Mark promising regions inside hotspot functions; record the "
+        "region→source mapping.",
+    ),
+    Stage(
+        "static_deps",
+        "core.deps.static_deps",
+        "BOLT analogue: jaxpr def-use walk; loop-carried state or scatter "
+        "writes inside a region demand a dynamic check.",
+        reject_on="irreducible loop-carried dependence",
+    ),
+    Stage(
+        "dynamic_deps",
+        "core.deps.check_conflicts",
+        "DynamoRIO analogue: replay recorded gather/scatter index traces "
+        "under the proposed task partition.",
+        reject_on="cross-task write conflict",
+    ),
+    Stage(
+        "simulate",
+        "core.overlap_model.OverlapModel.predict",
+        "Sniper analogue: price serial vs smt2 (co-scheduled pair on one "
+        "core) vs smp2 (two cores).",
+        reject_on="predicted smt2 gain ≤ 2%",
+    ),
+    Stage(
+        "restructure",
+        "core.relic.relic_pfor",
+        "Rewrite accepted regions onto the Relic API with the granularity "
+        "and stream count the simulator chose.",
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# The 20 Relic usage examples (paper §V.3). Each is (per-item fn, item
+# maker) — restructured with relic_pfor and asserted equal to vmap(fn).
+
+
+def _items(shape, dtype=jnp.float32, seed=0):
+    return jax.random.normal(jax.random.key(seed), shape, dtype)
+
+
+RELIC_EXAMPLES: list[dict] = [
+    dict(name="scale", fn=lambda x: 2.0 * x, items=lambda: _items((64, 8))),
+    dict(name="saxpy", fn=lambda ab: ab[0] * 1.5 + ab[1],
+         items=lambda: (_items((64, 8)), _items((64, 8), seed=1))),
+    dict(name="dot", fn=lambda xy: jnp.dot(xy[0], xy[1]),
+         items=lambda: (_items((32, 16)), _items((32, 16), seed=1))),
+    dict(name="norm", fn=lambda x: x / (jnp.linalg.norm(x) + 1e-6),
+         items=lambda: _items((48, 12))),
+    dict(name="relu_mlp", fn=lambda x: jax.nn.relu(x @ jnp.ones((8, 4))),
+         items=lambda: _items((64, 8))),
+    dict(name="softmax_row", fn=jax.nn.softmax, items=lambda: _items((40, 10))),
+    dict(name="cumsum_row", fn=jnp.cumsum, items=lambda: _items((40, 10))),
+    dict(name="sort_row", fn=jnp.sort, items=lambda: _items((32, 16))),
+    dict(name="topk_row", fn=lambda x: jax.lax.top_k(x, 4)[0],
+         items=lambda: _items((32, 16))),
+    dict(name="gather_reduce",
+         fn=lambda xi: xi[0][xi[1]].sum(),
+         items=lambda: (_items((32, 64)),
+                        jax.random.randint(jax.random.key(2), (32, 8), 0, 64))),
+    dict(name="stencil3",
+         fn=lambda x: x - 0.5 * (jnp.roll(x, 1) + jnp.roll(x, -1)),
+         items=lambda: _items((48, 16))),
+    dict(name="poly_eval", fn=lambda x: ((x * 0.5 + 1.0) * x - 2.0) * x + 3.0,
+         items=lambda: _items((64, 8))),
+    dict(name="masked_sum", fn=lambda x: jnp.where(x > 0, x, 0.0).sum(),
+         items=lambda: _items((64, 8))),
+    dict(name="argmin_dist",
+         fn=lambda q: jnp.argmin(jnp.sum((q[None, :] - jnp.eye(8)) ** 2, -1)),
+         items=lambda: _items((40, 8))),
+    dict(name="fixed_iter",
+         fn=lambda x: jax.lax.fori_loop(0, 4, lambda i, v: 0.5 * (v + x / jnp.maximum(v, 1e-3)), x),
+         items=lambda: jnp.abs(_items((64, 8))) + 1.0),
+    dict(name="bincount8",
+         fn=lambda i: jnp.zeros(8).at[i].add(1.0),
+         items=lambda: jax.random.randint(jax.random.key(3), (32, 16), 0, 8)),
+    dict(name="logsumexp_row", fn=jax.nn.logsumexp, items=lambda: _items((40, 10))),
+    dict(name="l2_pair",
+         fn=lambda xy: jnp.sum((xy[0] - xy[1]) ** 2),
+         items=lambda: (_items((48, 12)), _items((48, 12), seed=4))),
+    dict(name="clip_quant",
+         fn=lambda x: jnp.round(jnp.clip(x, -1, 1) * 127).astype(jnp.int8),
+         items=lambda: _items((64, 8))),
+    dict(name="window_mean",
+         fn=lambda x: jnp.convolve(x, jnp.ones(3) / 3.0, mode="same"),
+         items=lambda: _items((32, 16))),
+]
+assert len(RELIC_EXAMPLES) == 20

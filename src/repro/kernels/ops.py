@@ -1,0 +1,113 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each wrapper validates shapes, checks the VMEM working-set budget implied
+by the chosen block shapes (double-buffered operands + scratch must fit),
+and dispatches kernel vs. pure-jnp reference:
+
+  on TPU            → the Pallas kernel (compiled by Mosaic)
+  on CPU, testing   → the kernel in interpret mode (correctness)
+  on CPU, dry-run   → the jnp reference (so SPMD partitioning & the
+                      roofline read clean HLO; see DESIGN.md §2)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_ops
+from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.relic_matmul import relic_gemv, relic_matmul
+from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+VMEM_BYTES = 16 * 2**20  # v5e per-core VMEM budget
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def vmem_working_set(block_bytes: dict[str, int], buffering: int = 2) -> int:
+    """Bytes of VMEM a block schedule claims (double-buffered operands)."""
+    return sum(buffering * b for b in block_bytes.values())
+
+
+def check_vmem(block_bytes: dict[str, int], buffering: int = 2) -> None:
+    ws = vmem_working_set(block_bytes, buffering)
+    if ws > VMEM_BYTES:
+        raise ValueError(
+            f"block schedule needs {ws/2**20:.1f} MiB VMEM > {VMEM_BYTES/2**20:.0f} MiB: {block_bytes}"
+        )
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "mode"))
+def matmul(x, w, *, bm=256, bk=512, bn=256, mode="auto"):
+    """Double-buffered block matmul (Relic pair-scheduling on one core)."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref_ops.matmul_ref(x, w)
+    itemsize = jnp.dtype(x.dtype).itemsize
+    check_vmem(
+        {
+            "x": bm * bk * itemsize,
+            "w": bk * bn * itemsize,
+            "o": bm * bn * itemsize,
+            "acc": bm * bn * 4,
+        }
+    )
+    return relic_matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=mode == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "mode"))
+def gemv(x, w, *, bk=1024, bn=512, mode="auto"):
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref_ops.matmul_ref(x, w)
+    return relic_gemv(x, w, bk=bk, bn=bn, interpret=mode == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "mode"))
+def flash_attention(q, k, v, *, causal=True, bq=256, bk=512, mode="auto"):
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref_ops.attention_ref(q, k, v, causal=causal)
+    g = q.shape[2] // k.shape[2]
+    hd = q.shape[3]
+    itemsize = jnp.dtype(q.dtype).itemsize
+    check_vmem(
+        {
+            "q": g * bq * hd * itemsize,
+            "k": bk * hd * itemsize,
+            "v": bk * hd * itemsize,
+            "acc": g * bq * hd * 4,
+            "s": g * bq * bk * 4,
+        }
+    )
+    return _flash_kernel(q, k, v, causal=causal, bq=bq, bk=bk, interpret=mode == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "mode"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, bk=512, mode="auto"):
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref_ops.decode_attention_ref(q, k_cache, v_cache, cache_len)
+    return _decode_kernel(q, k_cache, v_cache, cache_len, bk=bk, interpret=mode == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "mode"))
+def ssd(xh, a, b, c, dt, *, chunk=128, mode="auto"):
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref_ops.ssd_ref(xh, a, b, c, dt)
+    N, hd = b.shape[-1], xh.shape[-1]
+    itemsize = jnp.dtype(xh.dtype).itemsize
+    check_vmem(
+        {
+            "x": chunk * hd * itemsize,
+            "b": chunk * N * itemsize,
+            "c": chunk * N * itemsize,
+            "att": chunk * chunk * 4,
+            "state": N * hd * 4,
+        }
+    )
+    return _ssd_kernel(xh, a, b, c, dt, chunk=chunk, interpret=mode == "interpret")

@@ -1,0 +1,164 @@
+"""Dry-run cell construction: (arch × shape × mesh) → lowerable step.
+
+``build_cell`` returns everything ``dryrun.py`` needs:
+  fn            — the step to lower (train / prefill / serve)
+  args          — ShapeDtypeStruct stand-ins for every input (no
+                  allocation; the input_specs contract from the brief)
+  in_shardings  — NamedShardings for each arg
+  donate        — argnums whose buffers alias outputs (memory honesty)
+  model_flops   — 6·N·D (train) / 2·N·tokens (inference) for the
+                  usefulness ratio in §Roofline
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, cell_is_runnable, get_config, get_shape
+from repro.data.pipeline import SyntheticLMData
+from repro.models.model import Model
+from repro.train.optimizer import AdamW, OptState
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    donate: tuple
+    model_flops: float
+    rules_fallbacks: list
+    runnable: bool = True
+    skip_reason: str = ""
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.kind in ("train", "prefill"):
+        data = SyntheticLMData(cfg, batch=shape.global_batch, seq=shape.seq_len)
+        return data.batch_specs()
+    # decode: one token + KV cache of seq_len
+    model = Model(cfg, mesh=mesh)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "cache": cache,
+    }
+
+
+def _abstract_opt(opt: AdamW, params_shapes):
+    return jax.eval_shape(opt.init, params_shapes)
+
+
+def build_cell(arch: str, shape_name: str, mesh, overrides: dict | None = None) -> Cell:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return Cell(arch, shape_name, None, (), (), (), 0.0, [], False, why)
+
+    model = Model(cfg, mesh=mesh)
+    rules = model.rules
+    pshapes, paxes = model.abstract_params()
+    pshard = rules.tree_shardings(pshapes, paxes)
+    n_active = cfg.active_param_count()
+
+    if shape.kind == "train":
+        opt = AdamW(total_steps=10_000)
+        oshapes = _abstract_opt(opt, pshapes)
+        oshard = OptState(
+            step=NamedSharding(mesh, P()),
+            mu=rules.tree_shardings(oshapes.mu, paxes),
+            nu=rules.tree_shardings(oshapes.nu, paxes),
+        )
+        # gradient accumulation bounds live activation tokens per device
+        # (per-arch train_accum; see EXPERIMENTS.md §Dry-run memory notes)
+        accum = max(1, cfg.train_accum)
+        micro = shape.global_batch // accum
+        data = SyntheticLMData(cfg, batch=micro, seq=shape.seq_len)
+        bspecs = data.batch_specs()
+        if accum > 1:
+            bspecs = {
+                k: jax.ShapeDtypeStruct((accum,) + v.shape, v.dtype)
+                for k, v in bspecs.items()
+            }
+            bshard = {
+                k: rules.sharding((None,) + ax, bspecs[k].shape)
+                for k, ax in data.batch_axes().items()
+            }
+        else:
+            bshard = {
+                k: rules.sharding(ax, bspecs[k].shape)
+                for k, ax in data.batch_axes().items()
+            }
+        use_zero2 = bool(cfg.zero2) and cfg.param_sharding == "fsdp"
+        step = make_train_step(
+            model, opt, accum_steps=accum, zero2_axes=paxes if use_zero2 else None
+        )
+        fn = step
+        args = (pshapes, oshapes, bspecs)
+        in_shardings = (pshard, oshard, bshard)
+        donate = (0, 1)
+        model_flops = 6.0 * n_active * shape.tokens
+    elif shape.kind == "prefill":
+        data = SyntheticLMData(cfg, batch=shape.global_batch, seq=shape.seq_len)
+        bspecs = data.batch_specs()
+        tshard = rules.sharding(("batch", "seq"), bspecs["tokens"].shape)
+
+        if cfg.family == "vlm":
+            pe = bspecs["patch_embeds"]
+            peshard = rules.sharding(("batch", None, None), pe.shape)
+
+            def fn(params, tokens, patch_embeds):
+                return model.prefill(params, tokens, shape.seq_len, patch_embeds=patch_embeds)
+
+            args = (pshapes, bspecs["tokens"], pe)
+            in_shardings = (pshard, tshard, peshard)
+        else:
+
+            def fn(params, tokens):
+                return model.prefill(params, tokens, shape.seq_len)
+
+            args = (pshapes, bspecs["tokens"])
+            in_shardings = (pshard, tshard)
+        donate = ()
+        model_flops = 2.0 * n_active * shape.tokens
+    else:  # decode
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        cshard = rules.tree_shardings(cache, model.cache_axes(cache))
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tshard = rules.sharding(("batch", None), tok.shape)
+        fn = model.decode_step
+        args = (pshapes, cache, tok)
+        in_shardings = (pshard, cshard, tshard)
+        donate = (1,)
+        model_flops = 2.0 * n_active * shape.global_batch
+
+    return Cell(
+        arch,
+        shape_name,
+        fn,
+        args,
+        in_shardings,
+        donate,
+        model_flops,
+        rules.fallbacks,
+    )

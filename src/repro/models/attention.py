@@ -1,0 +1,310 @@
+"""GQA attention: chunked-causal prefill/train and single-token decode.
+
+The prefill path is a pure-jnp flash-equivalent (running-max softmax over
+KV chunks) so activation memory stays O(S·chunk) rather than O(S²) — this
+is the reference semantics for ``kernels/flash_attention.py`` and the path
+the multi-pod dry-run lowers.
+
+Two causal blocking modes (the §Perf hillclimb axis):
+  masked      — every q attends over all KV chunks with a mask (2× causal
+                FLOPs, smallest HLO)
+  triangular  — python-unrolled q-blocks, each contracting only its causal
+                KV prefix (≈½ the FLOPs, bigger HLO)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, constrain, normal, rope_tables
+
+NEG = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d**-0.5
+    if cfg.attn_flat_tp:
+        # head-agnostic layout: projections shard the FLATTENED q/kv dim
+        # over 'model' even when n_heads ∤ mesh (phi3 40H, smollm 9H) —
+        # weights and their grads stay sharded; the head structure is
+        # recovered by a reshape + resharding constraint at attention
+        # entry (EXPERIMENTS.md §Perf hillclimb C it.4).
+        params = {
+            "wq": normal(ks[0], (d, h * hd), s, dtype),
+            "wk": normal(ks[1], (d, kv * hd), s, dtype),
+            "wv": normal(ks[2], (d, kv * hd), s, dtype),
+            "wo": normal(ks[3], (h * hd, d), (h * hd) ** -0.5, dtype),
+        }
+        axes = {
+            "wq": ("embed", "qdim"),
+            "wk": ("embed", "qdim"),
+            "wv": ("embed", "qdim"),
+            "wo": ("qdim", "embed"),
+        }
+        return params, axes
+    params = {
+        "wq": normal(ks[0], (d, h, hd), s, dtype),
+        "wk": normal(ks[1], (d, kv, hd), s, dtype),
+        "wv": normal(ks[2], (d, kv, hd), s, dtype),
+        "wo": normal(ks[3], (h, hd, d), (h * hd) ** -0.5, dtype),
+    }
+    axes = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return params, axes
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+    ).reshape(b, s, kv * n_rep, hd)
+
+
+# ---------------------------------------------------------------------------
+# prefill / train
+
+
+def _attn_chunk_step(q, kc, vc, k_pos, q_pos, m, l, acc, scale):
+    """One flash step: q [B,Sq,H,hd] against one KV chunk [B,Ck,H,hd]."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kc).astype(jnp.float32) * scale
+    mask = q_pos[None, None, :, None] >= k_pos[None, None, None, :]
+    s = jnp.where(mask, s, NEG)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vc.dtype), vc)
+    acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv.astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def gqa_attention(
+    q,
+    k,
+    v,
+    *,
+    q_offset=0,
+    chunk: int = 512,
+    blocking: str = "masked",
+    rules=None,
+):
+    """Causal GQA attention. q [B,Sq,H,hd]; k,v [B,Skv,KV,hd] (RoPE'd).
+
+    q_offset: absolute position of q[0] (Sq may be a suffix of Skv).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    n_rep = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, Skv)
+    while Skv % chunk:
+        chunk -= 1
+    nc = Skv // chunk
+    q_pos = q_offset + jnp.arange(Sq)
+
+    m0 = jnp.full((B, H, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+
+    if blocking == "triangular" and q_offset == 0 and Sq == Skv:
+        out = _triangular_attention(q, k, v, n_rep, scale, chunk, rules)
+        return constrain(rules, out, ("batch", "seq_sp", "heads", None))
+
+    def body(carry, idx):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, axis=1)
+        kc, vc = _repeat_kv(kc, n_rep), _repeat_kv(vc, n_rep)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        m, l, acc = _attn_chunk_step(q, kc, vc, k_pos, q_pos, m, l, acc, scale)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nc))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    out = out.astype(q.dtype)
+    return constrain(rules, out, ("batch", "seq_sp", "heads", None))
+
+
+def _triangular_attention(q, k, v, n_rep, scale, chunk, rules):
+    """Unrolled q-blocks, each over only its causal KV prefix (½ FLOPs)."""
+    B, Sq, H, hd = q.shape
+    nq = Sq // chunk
+    outs = []
+    for i in range(nq):
+        qi = jax.lax.slice_in_dim(q, i * chunk, (i + 1) * chunk, axis=1)
+        kv_len = (i + 1) * chunk
+        ki = _repeat_kv(jax.lax.slice_in_dim(k, 0, kv_len, axis=1), n_rep)
+        vi = _repeat_kv(jax.lax.slice_in_dim(v, 0, kv_len, axis=1), n_rep)
+        q_pos = i * chunk + jnp.arange(chunk)
+        k_pos = jnp.arange(kv_len)
+        m0 = jnp.full((B, H, chunk), NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, chunk), jnp.float32)
+        a0 = jnp.zeros((B, chunk, H, hd), jnp.float32)
+        m, l, acc = _attn_chunk_step(qi, ki, vi, k_pos, q_pos, m0, l0, a0, scale)
+        outs.append(
+            (acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]).astype(q.dtype)
+        )
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, rules=None):
+    """One-token attention over a (possibly seq-sharded) KV cache.
+
+    q [B,1,H,hd]; caches [B,Smax,KV,hd]; cache_len [B] valid lengths
+    (positions < cache_len participate). Softmax over the sharded Smax dim
+    partitions into partial max/sum + all-reduce (flash-decode semantics).
+    """
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(Smax)[None, :] < cache_len[:, None]  # [B, Smax]
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (beyond-paper; EXPERIMENTS.md §Perf #zamba2)
+
+
+def quantize_kv(x):
+    """x [..., hd] → (int8 values, per-vector scale). Exactly invertible
+    up to 1/254 relative error; halves decode cache bandwidth vs bf16."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6)
+    q = jnp.round(x.astype(jnp.float32) / scale * 127.0).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype):
+    return (
+        q.astype(jnp.float32) * (scale.astype(jnp.float32) / 127.0)[..., None]
+    ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# full block
+
+
+def attention_block(
+    params,
+    x,
+    *,
+    cfg,
+    rules=None,
+    positions=None,
+    cache=None,
+    cache_len=None,
+):
+    """Pre-norm'd GQA attention. Returns (out, new_cache_kv).
+
+    Train/prefill: cache is None → causal self-attention, cache returned
+    when ``cfg`` asks (prefill writes the cache it produced).
+    Decode: x is [B,1,D]; cache = (k,v) [B,Smax,KV,hd]; cache_len [B].
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if params["wq"].ndim == 2:  # flat-TP layout (attn_flat_tp)
+        q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, H, hd)
+        k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(B, S, KV, hd)
+        v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(B, S, KV, hd)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = constrain(rules, q, ("batch", "seq_sp", "heads", None))
+    k = constrain(rules, k, ("batch", None, "kv_heads", None))
+    v = constrain(rules, v, ("batch", None, "kv_heads", None))
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = gqa_attention(
+            q, k, v, chunk=cfg.attn_chunk, blocking=cfg.causal_blocking, rules=rules
+        )
+        new_kv = (k, v)
+    elif len(cache) == 5:
+        # int8-quantized stacked cache: (k_all int8, k_scale, v_all int8,
+        # v_scale, layer_idx). Reads move half the bytes of bf16.
+        k_all, ks_all, v_all, vs_all, li = cache
+        pos = cache_len[0]
+        zero = jnp.int32(0)
+        k_q, k_s = quantize_kv(k)
+        v_q, v_s = quantize_kv(v)
+        k_all = jax.lax.dynamic_update_slice(k_all, k_q[None], (li, zero, pos, zero, zero))
+        ks_all = jax.lax.dynamic_update_slice(ks_all, k_s[None], (li, zero, pos, zero))
+        v_all = jax.lax.dynamic_update_slice(v_all, v_q[None], (li, zero, pos, zero, zero))
+        vs_all = jax.lax.dynamic_update_slice(vs_all, v_s[None], (li, zero, pos, zero))
+        k_cache = dequantize_kv(
+            jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(ks_all, li, 0, keepdims=False),
+            x.dtype,
+        )
+        v_cache = dequantize_kv(
+            jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(vs_all, li, 0, keepdims=False),
+            x.dtype,
+        )
+        out = decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
+        new_kv = (k_all, ks_all, v_all, vs_all)
+    elif len(cache) == 3:
+        # stacked-cache decode: (k_all [L,B,S,KV,hd], v_all, layer_idx).
+        # The new token is written in place into the full stack (update =
+        # one token, not one layer slice) — the scan carries the stack, so
+        # donation aliases it and per-step traffic is O(token), not
+        # O(layer cache). See EXPERIMENTS.md §Perf #decode-cache.
+        k_all, v_all, li = cache
+        k_all = constrain(rules, k_all, (None, "batch", "kv_seq", "kv_heads", None))
+        v_all = constrain(rules, v_all, (None, "batch", "kv_seq", "kv_heads", None))
+        pos = cache_len[0]
+        zero = jnp.int32(0)
+        k_all = jax.lax.dynamic_update_slice(k_all, k[None], (li, zero, pos, zero, zero))
+        v_all = jax.lax.dynamic_update_slice(v_all, v[None], (li, zero, pos, zero, zero))
+        k_cache = jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False)
+        v_cache = jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False)
+        out = decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
+        new_kv = (k_all, v_all)
+    else:
+        k_cache, v_cache = cache
+        k_cache = constrain(rules, k_cache, ("batch", "kv_seq", "kv_heads", None))
+        v_cache = constrain(rules, v_cache, ("batch", "kv_seq", "kv_heads", None))
+        # insert the new token at cache_len (per batch row same position)
+        pos = cache_len[0]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+        out = decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
+        new_kv = (k_cache, v_cache)
+
+    if params["wo"].ndim == 2:  # flat-TP layout
+        o2 = out.astype(x.dtype).reshape(B, out.shape[1], H * hd)
+        o2 = constrain(rules, o2, ("batch", "seq_sp", "qdim"))
+        out = jnp.einsum("bse,ed->bsd", o2, params["wo"])
+    else:
+        out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])
+    return constrain(rules, out, ("batch", "seq_sp", None)), new_kv

@@ -1,0 +1,157 @@
+"""Shared building blocks: norms, RoPE, SwiGLU, embeddings, chunked loss.
+
+All functions are pure; parameters travel as (pytree, logical-axes-pytree)
+pairs and activations are sharding-constrained through ``ShardingRules``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def constrain(rules, x, axes):
+    """Sharding constraint that degrades to identity without a mesh."""
+    if rules is None:
+        return x
+    return rules.constrain(x, axes)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def gated_rms_norm(x, z, scale, eps):
+    """Mamba2 output norm: rmsnorm(x * silu(z)) * scale."""
+    return rms_norm(x * jax.nn.silu(z), scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_tables(positions, head_dim, theta):
+    """positions [...,] → (cos, sin) tables [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B, S, H, hd]; cos/sin [B, S, hd/2] or [S, hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def swiglu(x, w1, w3, w2, rules=None):
+    """SwiGLU MLP; hidden dim sharded over 'model'."""
+    h = jax.nn.silu(jnp.einsum("...d,df->...f", x, w1))
+    h = h * jnp.einsum("...d,df->...f", x, w3)
+    h = constrain(rules, h, (None,) * (h.ndim - 1) + ("mlp",))
+    return jnp.einsum("...f,fd->...d", h, w2)
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d_model**-0.5, d_ff**-0.5
+    params = {
+        "w1": normal(k1, (d_model, d_ff), s_in, dtype),
+        "w3": normal(k2, (d_model, d_ff), s_in, dtype),
+        "w2": normal(k3, (d_ff, d_model), s_out, dtype),
+    }
+    axes = {
+        "w1": ("embed", "mlp"),
+        "w3": ("embed", "mlp"),
+        "w2": ("mlp", "embed"),
+    }
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# vocabulary / loss
+
+
+def embed_tokens(embedding, tokens, rules=None):
+    x = jnp.take(embedding, tokens, axis=0)
+    return constrain(rules, x, ("batch", "seq", None))
+
+
+def chunked_softmax_xent(
+    x,
+    lm_head,
+    labels,
+    mask,
+    *,
+    chunk: int = 256,
+    rules=None,
+):
+    """Mean next-token cross-entropy without materializing [B,S,V].
+
+    Scans over sequence chunks; logits live only per chunk (the activation-
+    memory-honest formulation used for the dry-run memory analysis).
+    Returns (mean_loss, total_weight).
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n = S // chunk
+
+    # checkpointed: without this the scan's backward stacks each chunk's
+    # one-hot/logits (≈ tokens·V bytes — OOM at 100k vocab); rematerializing
+    # keeps only one chunk's transients alive during backward.
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, args):
+        xs, ls, ms = args  # [B, chunk, D], [B, chunk], [B, chunk]
+        logits = jnp.einsum("bsd,dv->bsv", xs, lm_head).astype(jnp.float32)
+        logits = constrain(rules, logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction instead of gather: partitions cleanly over a
+        # vocab-sharded logits tensor (no cross-shard gather); bf16 one-hot
+        # is exact (values are 0/1).
+        onehot = (ls[..., None] == jnp.arange(logits.shape[-1])[None, None]).astype(
+            jnp.bfloat16
+        )
+        tgt = jnp.sum(logits * onehot.astype(jnp.float32), axis=-1)
+        nll = (lse - tgt) * ms
+        return (carry[0] + nll.sum(), carry[1] + ms.sum()), None
+
+    xs = x.reshape(B, n, chunk, D).swapaxes(0, 1)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    ms = mask.reshape(B, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def init_norm(d, dtype):
+    return jnp.ones((d,), dtype), ("embed",)

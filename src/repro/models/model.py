@@ -1,0 +1,548 @@
+"""Unified model: config → init / loss / prefill / decode for all families.
+
+Layer stacks are scanned (``lax.scan`` over stacked [L, ...] parameters) so
+the HLO stays compact at 48+ layers; remat policy wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    chunked_softmax_xent,
+    constrain,
+    embed_tokens,
+    init_mlp,
+    normal,
+    rms_norm,
+    swiglu,
+)
+from repro.parallel.sharding import ShardingRules
+
+ATTN_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+# baseline switch (launch.dryrun --legacy): pre-optimization decode scan
+# slices the cache per layer via xs/ys, which writes a full layer-cache
+# slice back per step (EXPERIMENTS.md §Perf #decode-cache)
+LEGACY_CACHE_SCAN = False
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+class Model:
+    """Functional model wrapper: all methods are pure and jit-friendly."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = ShardingRules(mesh, cfg) if mesh is not None else None
+
+    # ------------------------------------------------------------------
+    # parameters
+    def init(self, key):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        keys = jax.random.split(key, cfg.num_layers + 8)
+        V, D = cfg.padded_vocab, cfg.d_model
+        params: dict[str, Any] = {
+            "embed": normal(keys[0], (V, D), D**-0.5, dt),
+            "final_norm": jnp.ones((D,), dt),
+        }
+        axes: dict[str, Any] = {
+            "embed": ("vocab", "embed"),
+            "final_norm": ("embed",),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = normal(keys[1], (D, V), D**-0.5, dt)
+            axes["lm_head"] = ("embed", "vocab")
+        if cfg.family == "vlm":
+            params["patch_proj"] = normal(keys[2], (D, D), D**-0.5, dt)
+            axes["patch_proj"] = (None, "embed")
+
+        lp, la = [], None
+        for i in range(cfg.num_layers):
+            p, a = self._init_layer(keys[3 + i], i)
+            lp.append(p)
+            la = a
+        params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *lp)
+        axes["layers"] = jax.tree.map(
+            lambda ax: ("layers",) + ax, la, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        if cfg.family == "hybrid":
+            p, a = self._init_shared_block(keys[2])
+            params["shared"], axes["shared"] = p, a
+        return params, axes
+
+    def _init_layer(self, key, i):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        k1, k2, k3 = jax.random.split(key, 3)
+        if cfg.family in ("ssm", "hybrid"):
+            p, a = ssm_mod.init_ssm(k1, cfg, dt)
+            return (
+                {"ssm": p, "norm": jnp.ones((cfg.d_model,), dt)},
+                {"ssm": a, "norm": ("embed",)},
+            )
+        ap, aa = attn.init_attention(k1, cfg, dt)
+        p = {
+            "attn": ap,
+            "attn_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        a = {"attn": aa, "attn_norm": ("embed",), "mlp_norm": ("embed",)}
+        if cfg.family == "moe":
+            p["moe"], a["moe"] = moe_mod.init_moe(k2, cfg, dt)
+        else:
+            p["mlp"], a["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+        return p, a
+
+    def _init_shared_block(self, key):
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        k1, k2 = jax.random.split(key)
+        ap, aa = attn.init_attention(k1, cfg, dt)
+        mp, ma = init_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+        p = {
+            "attn": ap,
+            "mlp": mp,
+            "attn_norm": jnp.ones((cfg.d_model,), dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        a = {"attn": aa, "mlp": ma, "attn_norm": ("embed",), "mlp_norm": ("embed",)}
+        return p, a
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct tree, logical-axes tree) without allocation."""
+        box = {}
+
+        def f(k):
+            p, a = self.init(k)
+            box["axes"] = a
+            return p
+
+        shapes = jax.eval_shape(f, jax.random.key(0))
+        return shapes, box["axes"]
+
+    # ------------------------------------------------------------------
+    # shared layer bodies
+    def _dense_layer(self, x, lp, path, positions=None, cache=None, cache_len=None):
+        cfg, rules = self.cfg, self.rules
+        h, new_kv = attn.attention_block(
+            lp["attn"],
+            rms_norm(x, lp["attn_norm"], cfg.norm_eps),
+            cfg=cfg,
+            rules=rules,
+            positions=positions,
+            cache=cache,
+            cache_len=cache_len,
+        )
+        x = x + h
+        hin = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, aux = moe_mod.moe_block(hin, lp["moe"], cfg, rules, path=path)
+        else:
+            h, aux = swiglu(hin, lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"], rules), 0.0
+        return x + h, aux, new_kv
+
+    def _ssm_layer(self, x, lp, state=None, want_state=False):
+        cfg, rules = self.cfg, self.rules
+        h, new_state = ssm_mod.ssm_block(
+            lp["ssm"],
+            rms_norm(x, lp["norm"], cfg.norm_eps),
+            cfg,
+            rules,
+            state=state,
+            want_state=want_state,
+        )
+        return x + h, new_state
+
+    # ------------------------------------------------------------------
+    # forward (train / prefill)
+    def forward(self, params, tokens, patch_embeds=None, want_cache=False):
+        """tokens [B,S'] → final hidden [B,S,D] (+ per-layer KV if asked)."""
+        cfg, rules = self.cfg, self.rules
+        x = embed_tokens(params["embed"], tokens, rules)
+        if cfg.family == "vlm":
+            pe = jnp.einsum("bpd,de->bpe", patch_embeds.astype(x.dtype), params["patch_proj"])
+            x = jnp.concatenate([pe, x], axis=1)
+        x = constrain(rules, x, ("batch", "seq", None))
+
+        if cfg.family in ATTN_FAMILIES:
+            x, aux, caches = self._forward_attn_stack(params, x, want_cache)
+        elif cfg.family == "ssm":
+            x, caches = self._forward_ssm_stack(params, x, want_cache)
+            aux = 0.0
+        elif cfg.family == "hybrid":
+            x, caches = self._forward_hybrid_stack(params, x, want_cache)
+            aux = 0.0
+        else:
+            raise ValueError(cfg.family)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux, caches
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        if self.cfg.remat == "full":
+            policy = jax.checkpoint_policies.nothing_saveable
+        else:
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+
+    def _forward_attn_stack(self, params, x, want_cache):
+        path = "dispatch"
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a, kv = self._dense_layer(x, lp, path)
+            ys = kv if want_cache else None
+            return (x, aux + a), ys
+
+        (x, aux), caches = jax.lax.scan(
+            self._maybe_remat(body), (x, 0.0), params["layers"]
+        )
+        return x, aux, caches
+
+    def _forward_ssm_stack(self, params, x, want_state=False):
+        def body(x, lp):
+            x, st = self._ssm_layer(x, lp, want_state=want_state)
+            return x, st
+
+        x, sts = jax.lax.scan(self._maybe_remat(body), x, params["layers"])
+        return x, sts
+
+    def _hybrid_grouped_params(self, params):
+        cfg = self.cfg
+        G = cfg.num_layers // cfg.attn_every
+        return jax.tree.map(
+            lambda p: p.reshape((G, cfg.attn_every) + p.shape[1:]), params["layers"]
+        )
+
+    def _forward_hybrid_stack(self, params, x, want_cache):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def group(carry, glp):
+            x = carry
+
+            def inner(x, lp):
+                x, st = self._ssm_layer(x, lp, want_state=want_cache)
+                return x, st
+
+            x, sts = jax.lax.scan(inner, x, glp)
+            h, kv = attn.attention_block(
+                shared["attn"],
+                rms_norm(x, shared["attn_norm"], cfg.norm_eps),
+                cfg=cfg,
+                rules=self.rules,
+            )
+            x = x + h
+            x = x + swiglu(
+                rms_norm(x, shared["mlp_norm"], cfg.norm_eps),
+                shared["mlp"]["w1"],
+                shared["mlp"]["w3"],
+                shared["mlp"]["w2"],
+                self.rules,
+            )
+            return x, ((kv, sts) if want_cache else None)
+
+        x, caches = jax.lax.scan(
+            self._maybe_remat(group), x, self._hybrid_grouped_params(params)
+        )
+        return x, caches
+
+    # ------------------------------------------------------------------
+    # losses / steps
+    def loss(self, params, batch):
+        """batch: tokens [B,S], labels [B,S], mask [B,S] (+patch_embeds)."""
+        cfg = self.cfg
+        x, aux, _ = self.forward(
+            params, batch["tokens"], patch_embeds=batch.get("patch_embeds")
+        )
+        if cfg.family == "vlm":
+            # hidden includes prepended patches; they predict nothing
+            n = cfg.n_frontend_tokens
+            x = x[:, n:, :]
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ce, cnt = chunked_softmax_xent(
+            x, head, batch["labels"], batch["mask"], rules=self.rules
+        )
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux, "tokens": cnt}
+
+    # ------------------------------------------------------------------
+    # decode
+    def init_cache(self, batch, max_seq, dtype=None):
+        cfg = self.cfg
+        dt = dtype or _dtype(cfg)
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+
+        def kv_cache(n):
+            if cfg.kv_quant:
+                return {
+                    "k": jnp.zeros((n, batch, max_seq, KV, hd), jnp.int8),
+                    "v": jnp.zeros((n, batch, max_seq, KV, hd), jnp.int8),
+                    "k_scale": jnp.zeros((n, batch, max_seq, KV), jnp.bfloat16),
+                    "v_scale": jnp.zeros((n, batch, max_seq, KV), jnp.bfloat16),
+                }
+            return {
+                "k": jnp.zeros((n, batch, max_seq, KV, hd), dt),
+                "v": jnp.zeros((n, batch, max_seq, KV, hd), dt),
+            }
+
+        cache: dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family in ATTN_FAMILIES:
+            cache.update(kv_cache(cfg.num_layers))
+        elif cfg.family == "ssm":
+            st = ssm_mod.init_ssm_state(cfg, batch, dt)
+            cache["ssm_state"] = jax.tree.map(
+                lambda s: jnp.broadcast_to(s[None], (cfg.num_layers,) + s.shape), st
+            )
+        elif cfg.family == "hybrid":
+            G = cfg.num_layers // cfg.attn_every
+            st = ssm_mod.init_ssm_state(cfg, batch, dt)
+            cache["ssm_state"] = jax.tree.map(
+                lambda s: jnp.broadcast_to(s[None], (cfg.num_layers,) + s.shape), st
+            )
+            cache.update(kv_cache(G))
+        return cache
+
+    def cache_axes(self, cache):
+        """Logical axes for every cache leaf (for dry-run shardings)."""
+
+        def leaf_axes(path, leaf):
+            names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            if "k_scale" in names or "v_scale" in names:
+                return (None, "batch", "kv_seq", "kv_heads")
+            if "k" in names or "v" in names:
+                return (None, "batch", "kv_seq", "kv_heads", None)
+            if "ssm" in names:
+                return (None, "batch", "ssm_heads", None, None)
+            if "conv_x" in names:
+                return (None, "batch", None, "ssm_inner")
+            if "conv_B" in names or "conv_C" in names:
+                return (None, "batch", None, None)
+            if "len" in names:
+                return (None,)
+            return (None,) * leaf.ndim
+
+        return jax.tree_util.tree_map_with_path(leaf_axes, cache)
+
+    def decode_step(self, params, cache, tokens):
+        """tokens [B,1] → (logits [B,V], new cache). One new token."""
+        cfg, rules = self.cfg, self.rules
+        B = tokens.shape[0]
+        x = embed_tokens(params["embed"], tokens, rules)
+        x = constrain(rules, x, ("batch", "seq", None))
+        positions = cache["len"][:, None]
+        aux = 0.0
+
+        if cfg.family in ATTN_FAMILIES and LEGACY_CACHE_SCAN:
+
+            def body_legacy(x, xs):
+                lp, kc, vc = xs
+                xo, _, (kc, vc) = self._dense_layer(
+                    x, lp, "dense", positions=positions,
+                    cache=(kc, vc), cache_len=cache["len"],
+                )
+                return xo, (kc, vc)
+
+            x, (ks, vs) = jax.lax.scan(
+                body_legacy, x, (params["layers"], cache["k"], cache["v"])
+            )
+            new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
+        elif cfg.family in ATTN_FAMILIES and cfg.kv_quant:
+
+            def body_q(carry, xs):
+                x, ks, kss, vs, vss = carry
+                lp, li = xs
+                xo, _, (ks, kss, vs, vss) = self._dense_layer(
+                    x, lp, "dense", positions=positions,
+                    cache=(ks, kss, vs, vss, li), cache_len=cache["len"],
+                )
+                return (xo, ks, kss, vs, vss), None
+
+            (x, ks, kss, vs, vss), _ = jax.lax.scan(
+                body_q,
+                (x, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"]),
+                (params["layers"], jnp.arange(cfg.num_layers)),
+            )
+            new_cache = {"k": ks, "k_scale": kss, "v": vs, "v_scale": vss,
+                         "len": cache["len"] + 1}
+        elif cfg.family in ATTN_FAMILIES:
+            # the cache STACK rides in the carry: per-step writes are one
+            # token, and donation aliases the whole stack in place
+            def body(carry, xs):
+                x, ks, vs = carry
+                lp, li = xs
+                xo, _, (ks, vs) = self._dense_layer(
+                    x, lp, "dense", positions=positions,
+                    cache=(ks, vs, li), cache_len=cache["len"],
+                )
+                return (xo, ks, vs), None
+
+            (x, ks, vs), _ = jax.lax.scan(
+                body,
+                (x, cache["k"], cache["v"]),
+                (params["layers"], jnp.arange(cfg.num_layers)),
+            )
+            new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
+        elif cfg.family == "ssm":
+
+            def body(x, xs):
+                lp, st = xs
+                x, new_st = self._ssm_layer(x, lp, state=st)
+                return x, new_st
+
+            x, sts = jax.lax.scan(body, x, (params["layers"], cache["ssm_state"]))
+            new_cache = {"ssm_state": sts, "len": cache["len"] + 1}
+        elif cfg.family == "hybrid":
+            x, new_cache = self._hybrid_decode(params, x, cache, positions)
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+        logits = constrain(rules, logits, ("batch", "vocab"))
+        return logits, new_cache
+
+    def _hybrid_decode(self, params, x, cache, positions):
+        cfg = self.cfg
+        shared = params["shared"]
+        glp = self._hybrid_grouped_params(params)
+        G = cfg.num_layers // cfg.attn_every
+        sts = jax.tree.map(
+            lambda s: s.reshape((G, cfg.attn_every) + s.shape[1:]),
+            cache["ssm_state"],
+        )
+
+        if LEGACY_CACHE_SCAN:
+            return self._hybrid_decode_legacy(params, x, cache, positions, shared, glp, sts, G)
+
+        quant = cfg.kv_quant
+
+        def group(carry, xs):
+            x, kv = carry
+            lp, st, gi = xs
+
+            def inner(x, xs2):
+                lp2, st2 = xs2
+                x, new_st2 = self._ssm_layer(x, lp2, state=st2)
+                return x, new_st2
+
+            x, new_st = jax.lax.scan(inner, x, (lp, st))
+            h, kv = attn.attention_block(
+                shared["attn"],
+                rms_norm(x, shared["attn_norm"], cfg.norm_eps),
+                cfg=cfg,
+                rules=self.rules,
+                positions=positions,
+                cache=kv + (gi,),  # in-place token write into the stack
+                cache_len=cache["len"],
+            )
+            x = x + h
+            x = x + swiglu(
+                rms_norm(x, shared["mlp_norm"], cfg.norm_eps),
+                shared["mlp"]["w1"],
+                shared["mlp"]["w3"],
+                shared["mlp"]["w2"],
+                self.rules,
+            )
+            return (x, kv), new_st
+
+        kv0 = (
+            (cache["k"], cache["k_scale"], cache["v"], cache["v_scale"])
+            if quant
+            else (cache["k"], cache["v"])
+        )
+        (x, kv), new_sts = jax.lax.scan(group, (x, kv0), (glp, sts, jnp.arange(G)))
+        new_sts = jax.tree.map(
+            lambda s: s.reshape((cfg.num_layers,) + s.shape[2:]), new_sts
+        )
+        out_cache = {"ssm_state": new_sts, "len": cache["len"] + 1}
+        if quant:
+            out_cache.update(k=kv[0], k_scale=kv[1], v=kv[2], v_scale=kv[3])
+        else:
+            out_cache.update(k=kv[0], v=kv[1])
+        return x, out_cache
+
+    def _hybrid_decode_legacy(self, params, x, cache, positions, shared, glp, sts, G):
+        """Pre-optimization hybrid decode (baseline measurement only)."""
+        cfg = self.cfg
+
+        def group(x, xs):
+            lp, st, kc, vc = xs
+
+            def inner(x, xs2):
+                lp2, st2 = xs2
+                x, new_st2 = self._ssm_layer(x, lp2, state=st2)
+                return x, new_st2
+
+            x, new_st = jax.lax.scan(inner, x, (lp, st))
+            h, (kc, vc) = attn.attention_block(
+                shared["attn"],
+                rms_norm(x, shared["attn_norm"], cfg.norm_eps),
+                cfg=cfg, rules=self.rules, positions=positions,
+                cache=(kc, vc), cache_len=cache["len"],
+            )
+            x = x + h
+            x = x + swiglu(
+                rms_norm(x, shared["mlp_norm"], cfg.norm_eps),
+                shared["mlp"]["w1"], shared["mlp"]["w3"], shared["mlp"]["w2"],
+                self.rules,
+            )
+            return x, (new_st, kc, vc)
+
+        x, (new_sts, ks, vs) = jax.lax.scan(group, x, (glp, sts, cache["k"], cache["v"]))
+        new_sts = jax.tree.map(
+            lambda s: s.reshape((cfg.num_layers,) + s.shape[2:]), new_sts
+        )
+        return x, {"ssm_state": new_sts, "k": ks, "v": vs, "len": cache["len"] + 1}
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens, max_seq, patch_embeds=None):
+        """Run the prompt, return (next-token logits [B,V], filled cache)."""
+        cfg = self.cfg
+        x, _, caches = self.forward(
+            params, tokens, patch_embeds=patch_embeds, want_cache=True
+        )
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+        B, S = x.shape[0], x.shape[1]
+        cache = self.init_cache(B, max_seq)
+
+        def fill_kv(cache, k, v):
+            if cfg.kv_quant:
+                kq, ks = attn.quantize_kv(k)
+                vq, vs = attn.quantize_kv(v)
+                for name, val, ax in (
+                    ("k", kq, 2), ("k_scale", ks, 2), ("v", vq, 2), ("v_scale", vs, 2),
+                ):
+                    cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                        cache[name], val, 0, axis=ax
+                    )
+            else:
+                cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
+                cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
+            return cache
+
+        if cfg.family in ATTN_FAMILIES:
+            k, v = caches  # [L,B,S,KV,hd]
+            cache = fill_kv(cache, k, v)
+        elif cfg.family == "ssm":
+            cache["ssm_state"] = caches
+        elif cfg.family == "hybrid":
+            (k, v), sts = caches  # kv [G,B,S,KV,hd]; sts [G,per,...]
+            cache = fill_kv(cache, k, v)
+            cache["ssm_state"] = jax.tree.map(
+                lambda s: s.reshape((cfg.num_layers,) + s.shape[2:]), sts
+            )
+        cache["len"] = jnp.full_like(cache["len"], S)
+        return logits, cache

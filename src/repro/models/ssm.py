@@ -1,0 +1,187 @@
+"""Mamba2 (SSD — state-space duality) block, chunked formulation.
+
+Train/prefill: the sequence is split into chunks of ``cfg.ssm_chunk``;
+within a chunk the recurrence is evaluated as a (causal) quadratic
+contraction, between chunks a state of shape [B, H, hd, N] is carried by a
+``lax.scan`` — the exact algorithm of arXiv:2405.21060 §6, and the
+reference semantics for ``kernels/ssd_scan.py``.
+
+Decode: O(1) per-token state update.
+
+n_groups = 1 (B/C shared across heads); A is per-head scalar (Mamba2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import constrain, gated_rms_norm, normal, rms_norm
+
+
+def init_ssm(key, cfg, dtype):
+    d, di, ns = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    h, cw = cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 10)
+    s = d**-0.5
+    params = {
+        "wx": normal(ks[0], (d, di), s, dtype),
+        "wz": normal(ks[1], (d, di), s, dtype),
+        "wB": normal(ks[2], (d, ns), s, dtype),
+        "wC": normal(ks[3], (d, ns), s, dtype),
+        "wdt": normal(ks[4], (d, h), s, dtype),
+        "conv_x": normal(ks[5], (cw, di), cw**-0.5, dtype),
+        "conv_B": normal(ks[6], (cw, ns), cw**-0.5, dtype),
+        "conv_C": normal(ks[7], (cw, ns), cw**-0.5, dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out": normal(ks[8], (di, d), di**-0.5, dtype),
+    }
+    axes = {
+        "wx": ("embed", "ssm_inner"),
+        "wz": ("embed", "ssm_inner"),
+        "wB": ("embed", "state"),
+        "wC": ("embed", "state"),
+        "wdt": ("embed", "ssm_heads"),
+        "conv_x": ("conv", "ssm_inner"),
+        "conv_B": ("conv", "state"),
+        "conv_C": ("conv", "state"),
+        "A_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out": ("ssm_inner", "embed"),
+    }
+    return params, axes
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x [B,S,C], w [K,C]. state [B,K-1,C] (decode).
+
+    Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, C]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1) :, :]
+    return y, new_state
+
+
+def _ssd_chunk_scan(xh, a, b, c, dt, chunk, rules=None):
+    """Chunked SSD. xh [B,S,H,hd]; a [B,S,H] decay (=exp(dt·A)); b,c
+    [B,S,N]; dt [B,S,H]. Returns (y [B,S,H,hd], final_state [B,H,hd,N]).
+    """
+    B, S, H, hd = xh.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+    r = lambda t: t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+    xh_, a_, b_, c_, dt_ = r(xh), r(a), r(b), r(c), r(dt)
+
+    la = jnp.cumsum(jnp.log(jnp.maximum(a_, 1e-20)), axis=2)  # [nc,B,Q,H]
+
+    def body(state, args):
+        xc, ac_la, bc, cc, dtc = args
+        # intra-chunk (causal quadratic): att[i,j] = (c_i·b_j)·exp(la_i-la_j)·dt_j
+        seg = jnp.exp(
+            jnp.clip(ac_la[:, :, None, :] - ac_la[:, None, :, :], -60.0, 0.0)
+        )  # [B,Q,Q,H], la_i - la_j for i>=j
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        att = cb[..., None] * seg * dtc[:, None, :, :]
+        att = jnp.where(causal[None, :, :, None], att, 0.0)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", att, xh_f := xc.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum(
+            "bin,bhdn,bih->bihd", cc.astype(jnp.float32), state, jnp.exp(ac_la)
+        )
+        # state update: S' = S·exp(la_end) + Σ_j b_j ⊗ (x_j·dt_j·exp(la_end-la_j))
+        decay_end = jnp.exp(ac_la[:, -1:, :])  # [B,1,H]
+        w = dtc * jnp.exp(jnp.clip(ac_la[:, -1:, :] - ac_la, -60.0, 60.0))  # [B,Q,H]
+        state = state * decay_end[:, 0][:, :, None, None] + jnp.einsum(
+            "bjhd,bjn,bjh->bhdn", xh_f, bc.astype(jnp.float32), w
+        )
+        return state, (y_intra + y_inter).astype(xh.dtype)
+
+    s0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    s_final, ys = jax.lax.scan(body, s0, (xh_, la, b_, c_, dt_))
+    return ys.swapaxes(0, 1).reshape(B, S, H, hd), s_final
+
+
+def ssm_block(params, x, cfg, rules=None, state=None, want_state=False):
+    """Mamba2 block. x [B,S,D].
+
+    Train: state=None → chunked scan, returns (y, None).
+    Prefill: state=None, want_state=True → (y, final state dict).
+    Decode: state = dict(ssm [B,H,hd,N] fp32, conv_x, conv_B, conv_C)
+    → one-step update, returns (y, new_state).
+    """
+    B, S, D = x.shape
+    h, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, params["wx"])
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    b = jnp.einsum("bsd,dn->bsn", x, params["wB"])
+    c = jnp.einsum("bsd,dn->bsn", x, params["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["wdt"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )
+    xz = constrain(rules, xz, ("batch", "seq", "ssm_inner"))
+    z = constrain(rules, z, ("batch", "seq", "ssm_inner"))
+
+    new_state = None
+    if state is None:
+        xz, cx = _causal_conv(xz, params["conv_x"])
+        b, cb = _causal_conv(b, params["conv_B"])
+        c, cc = _causal_conv(c, params["conv_C"])
+        if want_state:
+            new_state = {"conv_x": cx, "conv_B": cb, "conv_C": cc}
+    else:
+        xz, cx = _causal_conv(xz, params["conv_x"], state["conv_x"])
+        b, cb = _causal_conv(b, params["conv_B"], state["conv_B"])
+        c, cc = _causal_conv(c, params["conv_C"], state["conv_C"])
+        new_state = {"conv_x": cx, "conv_B": cb, "conv_C": cc}
+    xz, b, c = jax.nn.silu(xz), jax.nn.silu(b), jax.nn.silu(c)
+
+    A = -jnp.exp(params["A_log"])  # [H]
+    a = jnp.exp(dt * A)  # [B,S,H]
+    xh = xz.reshape(B, S, h, hd)
+    xh = constrain(rules, xh, ("batch", "seq", "ssm_heads", None))
+
+    if state is None:
+        y, s_final = _ssd_chunk_scan(xh, a, b, c, dt, cfg.ssm_chunk, rules)
+        if want_state:
+            new_state["ssm"] = s_final
+    else:
+        # one-step recurrence: S' = S·a + dt·(b ⊗ x); y = c·S' (+ skip below)
+        s_old = state["ssm"]  # [B,H,hd,N] fp32
+        xf = xh[:, 0].astype(jnp.float32)  # [B,H,hd]
+        s_new = s_old * a[:, 0][:, :, None, None] + jnp.einsum(
+            "bhd,bn,bh->bhdn", xf, b[:, 0].astype(jnp.float32), dt[:, 0]
+        )
+        y = jnp.einsum("bn,bhdn->bhd", c[:, 0].astype(jnp.float32), s_new)
+        y = y[:, None].astype(x.dtype).reshape(B, 1, h, hd)
+        new_state["ssm"] = s_new
+
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, h * hd)
+    y = gated_rms_norm(y, z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out"])
+    return constrain(rules, out, ("batch", "seq", None)), new_state
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    h, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cw = cfg.ssm_conv
+    return {
+        "ssm": jnp.zeros((batch, h, hd, ns), jnp.float32),
+        "conv_x": jnp.zeros((batch, cw - 1, cfg.ssm_d_inner), dtype),
+        "conv_B": jnp.zeros((batch, cw - 1, ns), dtype),
+        "conv_C": jnp.zeros((batch, cw - 1, ns), dtype),
+    }

@@ -1,0 +1,3 @@
+from repro.train.optimizer import AdamW, OptState  # noqa: F401
+from repro.train.train_step import make_train_step  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# make `repro` importable regardless of how pytest is invoked
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see the single
+# real device; sharded tests spawn subprocesses (test_sharded.py).

@@ -1,0 +1,61 @@
+"""The 10 paper benchmarks: restructured == serial, traces clean,
+granularity bands shaped like Figs. 1–2."""
+import jax
+import numpy as np
+import pytest
+
+from repro.bench_suite import BENCHMARKS
+from repro.core.deps import check_conflicts
+
+
+@pytest.mark.parametrize("name", list(BENCHMARKS), ids=list(BENCHMARKS))
+def test_restructured_matches_serial(name):
+    b = BENCHMARKS[name]
+    data = b.build()
+    want = np.asarray(b.serial_value(data), np.float32)
+    got = np.asarray(b.parallel_value(data, granularity=8), np.float32)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "name", [n for n, b in BENCHMARKS.items() if b.trace is not None]
+)
+def test_traces_conflict_free(name):
+    b = BENCHMARKS[name]
+    data = b.build()
+    conflict, why = check_conflicts(b.trace(data), n_tasks=2)
+    assert not conflict, why
+
+
+def test_fig1_band_structure():
+    """PFL (compute-bound): small-n negative everywhere, SMT less bad
+    than SMP; positive but small SMT gain at 1000 (paper: +5.1%)."""
+    from benchmarks.fig12_granularity import sweep
+    from repro.bench_suite import pfl
+
+    rows = {r["n"]: r for r in sweep(pfl.microtask())}
+    assert rows[10]["relic_smt"] < 0 and rows[10]["relic_smp"] < 0
+    assert rows[10]["relic_smt"] > rows[10]["relic_smp"]
+    assert 0.0 < rows[1000]["relic_smt"] < 0.12
+    assert rows[1000]["relic_smt"] > rows[1000]["openmp_smt"]
+
+
+def test_fig2_band_structure():
+    """CC (memory-bound): a fine-granularity band where Relic-SMT is
+    positive while OpenMP degrades; SMP wins at coarse granularity."""
+    from benchmarks.fig12_granularity import sweep
+    from repro.bench_suite import cc
+
+    rows = {r["n"]: r for r in sweep(cc.microtask())}
+    assert rows[25]["relic_smt"] > 0 > rows[25]["openmp_smp"]
+    assert rows[25]["relic_smt"] > rows[25]["relic_smp"]
+    assert rows[16000]["relic_smp"] > rows[16000]["relic_smt"]
+
+
+def test_lob_books_disjoint_across_symbols():
+    b = BENCHMARKS["LOB"]
+    data = b.build()
+    tr = b.trace(data)
+    w0 = set(np.asarray(tr.writes[0]).tolist())
+    w1 = set(np.asarray(tr.writes[1]).tolist())
+    assert not (w0 & w1)

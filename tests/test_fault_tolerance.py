@@ -1,0 +1,104 @@
+"""Checkpoint/restart, induced node failure, elastic restore, async
+save, straggler watchdog plumbing, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLMData
+from repro.models import Model
+from repro.train import AdamW, Trainer, TrainerConfig
+
+
+def _trainer(tmp, fail_at=None, total=12):
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    data = SyntheticLMData(cfg, batch=4, seq=32)
+    tc = TrainerConfig(total_steps=total, ckpt_every=5, ckpt_dir=str(tmp), log_every=100)
+    return Trainer(m, AdamW(lr=1e-3, warmup_steps=2, total_steps=total), data, tc,
+                   fail_at_step=fail_at, log_fn=lambda s: None)
+
+
+def test_induced_failure_and_bitexact_resume(tmp_path):
+    # run A: fail at step 7, restart, complete
+    tr = _trainer(tmp_path / "a", fail_at=7)
+    with pytest.raises(RuntimeError, match="induced node failure"):
+        tr.run()
+    state_a, _ = tr.run()  # resumes from the step-5 checkpoint
+    assert state_a.step == 12
+    assert any("restored step 5" in e for e in tr.events)
+
+    # run B: no failure — same data stream ⇒ identical final params
+    tr_b = _trainer(tmp_path / "b")
+    state_b, _ = tr_b.run()
+    da = jax.tree.leaves(state_a.params)
+    db = jax.tree.leaves(state_b.params)
+    for a, b in zip(da, db):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.arange(8.0), "b": jnp.ones((3,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.all_steps() == [3, 4]  # keep-2 GC
+    restored, meta = mgr.restore(tree)
+    assert meta["step"] == 4
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8.0))
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+def test_async_checkpoint(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"w": jnp.zeros((1000, 100))}
+    mgr.save(10, tree, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 10
+
+
+def test_elastic_restore_dtype_and_structure(tmp_path):
+    """A checkpoint restores into a differently-typed target (the
+    mesh-elastic path re-shards at load; on CPU we check structure+cast)."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    mgr.save(1, tree, blocking=True)
+    target = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    restored, _ = mgr.restore(target)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_straggler_watchdog_fires():
+    import time
+
+    from repro.train.trainer import Trainer
+
+    tr = _trainer.__wrapped__ if hasattr(_trainer, "__wrapped__") else None
+    # simulate: feed the EWMA then a slow step via monkeypatched clock
+    # (structural test — the watchdog path writes an event + checkpoint)
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    data = SyntheticLMData(cfg, batch=2, seq=16)
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(total_steps=6, ckpt_every=100, ckpt_dir=d,
+                           straggler_factor=0.0001, log_every=100)
+        t = Trainer(m, AdamW(lr=1e-3, total_steps=6), data, tc, log_fn=lambda s: None)
+        t.run()
+        assert any("straggler" in e for e in t.events)
+
+
+def test_gradient_compression_error_feedback():
+    from repro.parallel.compression import _quantize
+
+    g = jnp.array([0.1, -0.25, 0.003, 1.0])
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    q, err = _quantize(g, scale)
+    assert q.dtype == jnp.int8
+    # dequantized + residual reconstructs exactly
+    np.testing.assert_allclose(np.asarray(q * scale + err), np.asarray(g), atol=1e-7)

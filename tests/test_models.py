@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step
+on CPU, output shapes + finite values; decode ≡ prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.data import SyntheticLMData
+from repro.models import Model
+from repro.train import AdamW, make_train_step
+
+
+def _batch(cfg, B=2, S=32):
+    data = SyntheticLMData(cfg, batch=B, seq=S)
+    return data.batch_at(0)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_loss_and_step(arch):
+    cfg = get_config(arch).reduced()
+    m = Model(cfg)
+    params, axes = m.init(jax.random.key(0))
+    assert jax.tree_util.tree_structure(params) == jax.tree_util.tree_structure(
+        jax.tree.map(lambda _: 0, axes, is_leaf=lambda x: isinstance(x, tuple))
+    )
+    batch = _batch(cfg)
+    opt = AdamW(lr=1e-3, warmup_steps=2, total_steps=10)
+    step = jax.jit(make_train_step(m, opt))
+    params2, opt_state, metrics = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert float(metrics["loss"]) < 3 * np.log(cfg.padded_vocab)
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, params2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_shapes(arch):
+    cfg = get_config(arch).reduced()
+    m = Model(cfg)
+    params, _ = m.init(jax.random.key(0))
+    B = 2
+    cache = m.init_cache(B, 64)
+    logits, cache2 = jax.jit(m.decode_step)(params, cache, jnp.ones((B, 1), jnp.int32))
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert int(cache2["len"][0]) == 1
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "granite-moe-1b-a400m", "mamba2-370m", "zamba2-2.7b"])
+def test_decode_matches_prefill(arch):
+    """Greedy decode over a prompt suffix == teacher-forced forward.
+
+    MoE: capacity dropping in the train/prefill dispatch path is expected
+    behaviour but breaks exactness — compare in the drop-free regime
+    (capacity_factor = E/k ⇒ every expert can absorb every token)."""
+    import dataclasses
+
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.n_experts) / cfg.top_k
+        )
+    m = Model(cfg)
+    params, _ = m.init(jax.random.key(1))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    # full forward logits at position S-1
+    x, _, _ = m.forward(params, toks)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    want = jnp.einsum("bd,dv->bv", x[:, -1], head)
+    # prefill S-1 tokens, decode token S-1
+    logits_p, cache = jax.jit(lambda p, t: m.prefill(p, t, 32))(params, toks[:, : S - 1])
+    got, _ = jax.jit(m.decode_step)(params, cache, toks[:, S - 1 :])
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_vlm_frontend_stub():
+    cfg = get_config("internvl2-2b").reduced()
+    m = Model(cfg)
+    params, _ = m.init(jax.random.key(0))
+    B, S = 2, 32
+    data = SyntheticLMData(cfg, batch=B, seq=S)
+    batch = data.batch_at(0)
+    assert batch["tokens"].shape == (B, S - cfg.n_frontend_tokens)
+    loss, metrics = jax.jit(m.loss)(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_moe_reference_routing_properties():
+    from repro.models.moe import _moe_reference, init_moe
+
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    params, _ = init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (64, cfg.d_model))
+    y, aux = _moe_reference(x, params, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0  # load-balance loss is positive
+
+
+def test_param_counts_match_published():
+    for arch, lo, hi in [
+        ("dbrx-132b", 125e9, 135e9),
+        ("phi3-medium-14b", 13.5e9, 15.5e9),
+        ("internlm2-20b", 19e9, 21e9),
+        ("smollm-135m", 0.125e9, 0.145e9),
+        ("mamba2-370m", 0.34e9, 0.40e9),
+    ]:
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_int8_kv_cache_decode_accuracy():
+    """kv_quant=True decode logits ≈ bf16-cache decode (≤5% rel err)."""
+    import dataclasses
+
+    for arch in ("smollm-135m", "zamba2-2.7b"):
+        cfg = get_config(arch).reduced()
+        cfgq = dataclasses.replace(cfg, kv_quant=True)
+        m, mq = Model(cfg), Model(cfgq)
+        params, _ = m.init(jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(2), (2, 12), 0, cfg.vocab_size)
+        _, cache = jax.jit(lambda p, t: m.prefill(p, t, 32))(params, toks[:, :-1])
+        _, cacheq = jax.jit(lambda p, t: mq.prefill(p, t, 32))(params, toks[:, :-1])
+        g1, _ = jax.jit(m.decode_step)(params, cache, toks[:, -1:])
+        g2, _ = jax.jit(mq.decode_step)(params, cacheq, toks[:, -1:])
+        rel = float(jnp.abs(g1 - g2).max()) / (float(jnp.abs(g1).max()) + 1e-9)
+        assert rel < 0.05, (arch, rel)
+
+
+def test_flat_tp_attention_equivalence():
+    """attn_flat_tp=True (head-agnostic sharded projections) computes
+    exactly the same forward as the standard head layout."""
+    import dataclasses
+
+    cfg = get_config("smollm-135m").reduced()
+    cfgf = dataclasses.replace(cfg, attn_flat_tp=True)
+    m, mf = Model(cfg), Model(cfgf)
+    params, _ = m.init(jax.random.key(0))
+    lp = dict(params["layers"])
+    at = dict(lp["attn"])
+    L, D = at["wq"].shape[0], cfg.d_model
+    lp["attn"] = {
+        "wq": at["wq"].reshape(L, D, -1),
+        "wk": at["wk"].reshape(L, D, -1),
+        "wv": at["wv"].reshape(L, D, -1),
+        "wo": at["wo"].reshape(L, -1, D),
+    }
+    pf = dict(params, layers=lp)
+    toks = jax.random.randint(jax.random.key(2), (2, 16), 0, cfg.vocab_size)
+    x1, _, _ = m.forward(params, toks)
+    x2, _, _ = mf.forward(pf, toks)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), atol=1e-5)

@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system: the full Aira flow
+(profile → annotate → deps → simulate → restructure) on a real workload,
+plus end-to-end train + serve round trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench_suite import BENCHMARKS
+from repro.core import Aira, profile_step
+from repro.core.overlap_model import CPU_HW
+
+
+def test_aira_end_to_end_geospatial():
+    """Full pipeline on GeoSpatial: accepted, restructured, semantics
+    preserved, report readable."""
+    from benchmarks.fig34_aira import make_workload
+
+    b = BENCHMARKS["GeoSpatial"]
+    data = b.build()
+    wl = make_workload(b, data)
+    report = Aira(hw=CPU_HW).advise(wl)
+    d = report.decisions[0]
+    assert d.accepted
+    assert d.schedule.strategy == "smt2"
+    # the restructured callable computes the same result
+    got = np.asarray(d.parallel_fn(), np.float32)
+    want = np.asarray(jax.vmap(b.item_fn(data))(b.items(data)), np.float32)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+    text = report.render()
+    assert "Parallelize this program with Aira" in text
+    assert "static:" in d.summary() and "simulate:" in d.summary()
+
+
+def test_profile_step_roofline_terms():
+    ps = profile_step(
+        lambda x, w: jnp.tanh(x @ w),
+        jax.ShapeDtypeStruct((512, 512), jnp.float32),
+        jax.ShapeDtypeStruct((512, 512), jnp.float32),
+        name="mm",
+    )
+    assert ps.flops > 2 * 512**3 * 0.99
+    assert ps.terms.dominant in ("compute", "memory")
+    rep = ps.report()
+    assert "roofline" in rep and "hotspots" in rep
+
+
+def test_train_then_serve_roundtrip():
+    """Train a reduced model a few steps, then serve greedily — the whole
+    example-application path in miniature."""
+    from repro.configs import get_config
+    from repro.data import SyntheticLMData
+    from repro.models import Model
+    from repro.serve import ServingEngine
+    from repro.train import AdamW, make_train_step
+
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params, _ = m.init(jax.random.key(0))
+    opt = AdamW(lr=1e-3, warmup_steps=2, total_steps=20)
+    state = opt.init(params)
+    data = SyntheticLMData(cfg, batch=4, seq=32)
+    step = jax.jit(make_train_step(m, opt))
+    losses = []
+    for i in range(8):
+        params, state, metrics = step(params, state, data.batch_at(i))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]  # learning happens
+
+    eng = ServingEngine(m, params, max_seq=64)
+    out = eng.generate(jnp.ones((2, 8), jnp.int32), n_steps=4)
+    assert out.shape == (2, 4)
+    assert eng.stats.percentile(50) > 0
