@@ -9,6 +9,11 @@ Expected reproduction pattern (paper §VII):
     per-item dispatch), reproducing Fig. 4,
   * geomean over all 10 with non-applied = 1.0 ⇒ ≈ 17%.
 
+The whole figure now flows through the plan layer: ``advise_suite``
+batch-advises every registered benchmark via the tool pipeline, and the
+restructured wall-clock is measured by executing each benchmark's cached
+``RegionPlan`` (so re-running the figure re-uses compiled plans).
+
 CPU wall-clock of serial vs restructured JAX is printed as a sanity
 reference (vectorization effects, not SMT — the gains column is the
 calibrated i7-12700 dual-stream model, see DESIGN.md §2).
@@ -21,24 +26,15 @@ import jax
 import numpy as np
 
 from repro.bench_suite import BENCHMARKS
-from repro.core import Aira, Region, Workload
+from repro.core import Workload
 from repro.core.overlap_model import CPU_HW, Microtask, OverlapModel
+from repro.core.plan import advise_suite
 
 
 def make_workload(b, data) -> Workload:
-    c = b.cost(data)
-    region = Region(
-        name=b.name,
-        fn=b.item_fn(data),
-        items=b.items(data),
-        task_flops=c["flops"],
-        task_bytes=c["bytes"],
-        task_chain=c["chain"],
-        vector=c.get("vector", True),
-        trace=b.trace(data) if b.trace else None,
-        force=b.force,
-    )
-    return Workload(name=b.name, serial_fn=lambda: b.serial_value(data), regions=[region])
+    """The benchmark's single-region workload (kept for callers that
+    advise one benchmark at a time; ``advise_suite`` covers the set)."""
+    return b.workload(data)
 
 
 def realized_gain(b, data, decision) -> float:
@@ -67,31 +63,30 @@ def realized_gain(b, data, decision) -> float:
     return serial_orig / p.smt2 - 1.0
 
 
+def _wall(thunk, reps=3) -> float:
+    jax.block_until_ready(thunk())  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(thunk())
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
 def run(print_fn=print, timing: bool = True):
-    aira = Aira(hw=CPU_HW)
+    suite = advise_suite(hw=CPU_HW)
     rows = []
-    for name, b in BENCHMARKS.items():
-        data = b.build()
-        wl = make_workload(b, data)
-        report = aira.advise(wl)
-        d = report.decisions[0]
+    for name, entry in suite.items():
+        b, data, d = BENCHMARKS[name], entry.data, entry.decision
         rg = realized_gain(b, data, d)
         wall_serial = wall_par = float("nan")
         if timing:
-            f = jax.jit(b.serial_value)
-            v = f(data)
-            jax.block_until_ready(v)
-            t0 = time.perf_counter()
-            for _ in range(3):
-                jax.block_until_ready(f(data))
-            wall_serial = (time.perf_counter() - t0) / 3 * 1e3
-            g = d.schedule.granularity if (d.accepted and d.schedule) else 8
-            fp = jax.jit(lambda dd: b.parallel_value(dd, granularity=max(1, g)))
-            jax.block_until_ready(fp(data))
-            t0 = time.perf_counter()
-            for _ in range(3):
-                jax.block_until_ready(fp(data))
-            wall_par = (time.perf_counter() - t0) / 3 * 1e3
+            comb = b.combine
+            f = jax.jit(lambda dd: b.serial_value(dd, combine=comb))
+            wall_serial = _wall(lambda: f(data))
+            if entry.plan is not None:
+                items = b.items(data)
+                wall_par = _wall(lambda: entry.plan.execute(items))
+            else:  # rejected: time the would-be restructuring anyway
+                wall_par = _wall(lambda: b.parallel_value(data, granularity=8, combine=comb))
         rows.append(
             dict(
                 name=name,

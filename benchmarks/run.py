@@ -6,32 +6,63 @@
   µbench       CPU wall-clock of each benchmark's serial JAX kernel
                (``name,us_per_call,derived`` CSV)
 
+Every run writes ``BENCH_aira.json`` — per-benchmark predicted/realized
+gain plus the µbench wall-clock — so the perf trajectory is machine-
+readable across PRs. ``--fast`` skips the restructured-vs-serial timing
+comparison but still emits the summary (fewer µbench reps).
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 import jax
 
 
-def _microbench(print_fn=print):
+def _microbench(print_fn=print, reps: int = 5) -> dict[str, float]:
     from repro.bench_suite import BENCHMARKS
 
     print_fn("# µbench — serial kernel wall-clock (CPU, one iteration)")
     print_fn("name,us_per_call,derived")
+    out = {}
     for name, b in BENCHMARKS.items():
         data = b.build()
         f = jax.jit(b.serial_value)
         jax.block_until_ready(f(data))
         t0 = time.perf_counter()
-        reps = 5
         for _ in range(reps):
             jax.block_until_ready(f(data))
         us = (time.perf_counter() - t0) / reps * 1e6
         n = jax.tree.leaves(b.items(data))[0].shape[0]
         print_fn(f"{name},{us:.1f},items={n}")
+        out[name] = us
+    return out
+
+
+def write_summary(rows, gm_pos, gm_all, ubench_us, path="BENCH_aira.json") -> None:
+    """Machine-readable per-PR perf summary (predicted gains are the
+    calibrated overlap model; µbench is measured CPU wall-clock)."""
+    summary = {
+        "benchmarks": [
+            {
+                "name": r["name"],
+                "accepted": r["accepted"],
+                "schedule": r["schedule"],
+                "predicted_gain": r["predicted"],
+                "realized_gain_model": r["realized"],
+                "ubench_serial_us": ubench_us.get(r["name"]),
+            }
+            for r in rows
+        ],
+        "geomean_positive": gm_pos,
+        "geomean_all_discard_negative": gm_all,
+    }
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, default=float)
+    print(f"wrote {path}")
 
 
 def main() -> None:
@@ -40,12 +71,12 @@ def main() -> None:
 
     fig12_granularity.run()
     print()
-    fig34_aira.run(timing=not fast)
+    rows, gm_pos, gm_all = fig34_aira.run(timing=not fast)
     print()
     roofline.run()
     print()
-    if not fast:
-        _microbench()
+    ubench_us = _microbench(reps=2 if fast else 5)
+    write_summary(rows, gm_pos, gm_all, ubench_us)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,11 @@
 """Apply Aira to YOUR OWN kernel — the paper's "Parallelize this program
 with Aira" flow on a user-supplied region.
 
+The advisory run now flows through the tool pipeline (profiler → deps →
+simulator → restructurer), and an accepted region comes back with a
+cached ``RegionPlan``: re-advising or re-executing the same region
+signature reuses the compiled plan instead of retracing.
+
   PYTHONPATH=src python examples/parallelize_with_aira.py
 """
 import jax
@@ -9,6 +14,7 @@ import numpy as np
 
 from repro.core import Aira, Region, Workload
 from repro.core.overlap_model import CPU_HW
+from repro.core.plan import plan_cache_stats
 
 
 def main():
@@ -35,14 +41,27 @@ def main():
     )
     print(report.render())
     d = report.decisions[0]
-    if d.accepted:
-        got = np.asarray(d.parallel_fn())
-        want = np.asarray(jax.vmap(nearest)(queries))
-        assert (got == want).all()
-        print(f"\nrestructured output verified on {len(want)} items; "
-              f"schedule: {d.schedule.describe()}")
-    else:
+    if not d.accepted:
         print("\nregion not profitable — left serial (the gate did its job)")
+        return
+
+    got = np.asarray(d.parallel_fn())
+    want = np.asarray(jax.vmap(nearest)(queries))
+    assert (got == want).all()
+    print(f"\nrestructured output verified on {len(want)} items; "
+          f"schedule: {d.schedule.describe()}")
+
+    # the plan is a cached, reusable artifact: execute on fresh items of
+    # the same signature, and re-advising hits the plan cache
+    more_queries = jax.random.normal(jax.random.key(2), (2048, 32))
+    got2 = np.asarray(d.plan.execute(more_queries))
+    want2 = np.asarray(jax.vmap(nearest)(more_queries))
+    assert (got2 == want2).all()
+    report2 = Aira(hw=CPU_HW).advise(
+        Workload("user-kernel", lambda: jax.vmap(nearest)(queries), [region])
+    )
+    assert report2.decisions[0].plan is d.plan
+    print(f"plan reused on new items; cache: {plan_cache_stats()}")
 
 
 if __name__ == "__main__":

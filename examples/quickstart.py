@@ -25,9 +25,10 @@ def main():
     print(report.render())
     d = report.decisions[0]
     if d.accepted:
+        # the benchmark declares combine="sum"; the plan honors it
         got = np.asarray(d.parallel_fn())
-        want = np.asarray(jax.vmap(b.item_fn(data))(b.items(data)))
-        print(f"\nrestructured == serial: {np.allclose(got, want, atol=1e-4)}")
+        want = np.asarray(b.serial_value(data, combine=b.combine))
+        print(f"\nrestructured == serial: {np.allclose(got, want, atol=1e-3)}")
         print(f"chosen schedule: {d.schedule.describe()}")
 
     # 2) the granularity band (paper Figs. 1–2)

@@ -1,8 +1,11 @@
 """Latency-critical serving example: batched greedy decoding with
-per-step latency percentiles — optionally with the int8 KV cache.
+per-step latency percentiles — optionally with the int8 KV cache, and
+optionally advised by Aira (``--aira`` exposes the decode step as a
+Region, advises it, and routes decoding through the accepted
+RegionPlan).
 
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
-      [--int8-kv] [--tokens 32]
+      [--int8-kv] [--tokens 32] [--aira]
 """
 import argparse
 import dataclasses
@@ -21,6 +24,8 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--aira", action="store_true",
+                    help="advise the decode step and serve through its RegionPlan")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -31,8 +36,20 @@ def main():
     engine = ServingEngine(model, params, max_seq=256)
 
     prompts = jax.random.randint(jax.random.key(1), (args.batch, 16), 0, cfg.vocab_size)
+
+    if args.aira:
+        from repro.core import Aira, Workload
+
+        region = engine.decode_region(prompts, force=True)
+        report = Aira().advise(Workload("serve-decode", lambda: None, [region]))
+        print(report.render())
+        d = report.decisions[0]
+        if d.accepted:
+            engine.set_decode_plan(d.plan)
+            print("decode routed through RegionPlan:", d.plan.describe())
+
     out = engine.generate(prompts, args.tokens)
-    print(f"arch={args.arch} int8_kv={args.int8_kv}")
+    print(f"arch={args.arch} int8_kv={args.int8_kv} aira={args.aira}")
     print(f"generated {out.shape} tokens; first row: {out[0][:12].tolist()}")
     print(f"decode latency: {engine.stats.summary()}")
 

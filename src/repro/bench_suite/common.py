@@ -40,18 +40,69 @@ class Benchmark:
     realized_granularity: int = 0  # Relic API floor when forced (0 = free)
     locality_penalty: float = 0.0  # chain/bytes inflation when forced
 
-    def serial_value(self, data):
-        """One measurement iteration, serial semantics."""
+    def region(self, data, combine: str | None = None):
+        """The benchmark's annotated region, ready for the tool pipeline.
+        combine=None → the benchmark's declared combine mode."""
+        from repro.core.adviser import Region
+
+        c = self.cost(data)
+        return Region(
+            name=self.name,
+            fn=self.item_fn(data),
+            items=self.items(data),
+            task_flops=c["flops"],
+            task_bytes=c["bytes"],
+            task_chain=c["chain"],
+            vector=c.get("vector", True),
+            trace=self.trace(data) if self.trace else None,
+            force=self.force,
+            combine=self.combine if combine is None else combine,
+        )
+
+    def workload(self, data, combine: str | None = None):
+        from repro.core.adviser import Workload
+
+        return Workload(
+            name=self.name,
+            serial_fn=lambda: self.serial_value(data, combine=combine),
+            regions=[self.region(data, combine=combine)],
+        )
+
+    def serial_value(self, data, combine: str | None = None):
+        """One measurement iteration, serial semantics. combine="sum"
+        reduces per-item results the way the declared region does."""
         fn = self.item_fn(data)
         its = self.items(data)
-        return jax.lax.map(fn, its)
+        out = jax.lax.map(fn, its)
+        if combine == "sum":
+            return jax.tree.map(lambda y: y.sum(axis=0), out)
+        return out
 
-    def parallel_value(self, data, granularity=8):
+    def parallel_value(self, data, granularity=8, combine: str | None = None):
+        """The restructured iteration, through the cached plan layer.
+
+        combine=None → "stack" (item order preserved, elementwise-
+        comparable to serial_value). Under an outer trace the plan cache
+        is bypassed — caching a closure over tracers would leak them.
+        """
+        from repro import compat
+        from repro.core import plan as plan_mod
         from repro.core.relic import relic_pfor
 
         fn = self.item_fn(data)
         its = self.items(data)
-        return relic_pfor(fn, its, granularity=granularity)
+        comb = combine or "stack"
+        if any(compat.is_tracer(l) for l in jax.tree.leaves((its, data))):
+            return relic_pfor(fn, its, granularity=granularity, combine=comb)
+        plan = plan_mod.plan_for(
+            self.name,
+            fn,
+            its,
+            granularity=granularity,
+            combine=comb,
+            salt=plan_mod.data_fingerprint(data),
+        )
+        return plan.execute(its)
 
 
 def register(b: Benchmark) -> Benchmark:

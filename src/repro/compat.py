@@ -1,0 +1,57 @@
+"""Cross-version JAX shims.
+
+``shard_map`` moved twice: ``jax.experimental.shard_map.shard_map``
+(≤ 0.4.x), then ``jax.shard_map`` (≥ 0.6) where the replication-check
+keyword was renamed ``check_rep`` → ``check_vma``. Callers here use the
+modern spelling; this wrapper maps it onto whatever the installed jax
+understands.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def axis_size(axis_name) -> int:
+    """``lax.axis_size`` (jax ≥ 0.5); on 0.4.x, ``psum`` of a Python
+    literal, which jax constant-folds to the static mesh-axis size."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def is_tracer(x) -> bool:
+    """True when `x` is a jax tracer (positive detection — raises on a
+    jax version where Tracer cannot be located, rather than silently
+    treating everything as concrete)."""
+    import jax
+
+    tracer_cls = getattr(jax.core, "Tracer", None)
+    if tracer_cls is None:
+        from jax._src.core import Tracer as tracer_cls
+    return isinstance(x, tracer_cls)
+
+
+def tpu_compiler_params(**kw):
+    """``pltpu.CompilerParams`` (new name) / ``TPUCompilerParams`` (0.4.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kw)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None, **kw):
+    if check_vma is not None:
+        if "check_vma" in _PARAMS:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in _PARAMS:
+            kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

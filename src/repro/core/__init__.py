@@ -1,5 +1,5 @@
 """Aira core: the paper's contribution as a composable JAX module."""
-from repro.core.adviser import AdviceReport, Aira, Region, Workload  # noqa: F401
+from repro.core.adviser import AdviceReport, Aira, Region, RegionDecision, Workload  # noqa: F401
 from repro.core.overlap_model import (  # noqa: F401
     HwModel,
     Microtask,
@@ -7,5 +7,25 @@ from repro.core.overlap_model import (  # noqa: F401
     SchedulePrediction,
     gate,
 )
+from repro.core.plan import (  # noqa: F401
+    RegionPlan,
+    SuiteEntry,
+    advise_suite,
+    clear_plan_cache,
+    plan_cache_stats,
+    plan_for,
+    plan_for_region,
+)
 from repro.core.profiler import ProfiledStep, RooflineTerms, profile_step  # noqa: F401
 from repro.core.relic import RelicSchedule, choose_schedule, relic_pfor  # noqa: F401
+from repro.core.tools import (  # noqa: F401
+    DEFAULT_TOOLS,
+    AdviserPolicy,
+    AdviserTool,
+    RecordingPolicy,
+    ReplayPolicy,
+    SpecPolicy,
+    StageResult,
+    ToolContext,
+    ToolPipeline,
+)

@@ -7,24 +7,33 @@
   → restructure with the Relic analogue
 
 The paper drives these stages with Claude Sonnet 4 inside Cursor via MCP
-tools; the tool surface here is identical (profiler / deps / overlap
-simulator / relic restructurer) and the decision policy is the spec's
-deterministic rules, swappable via ``AdviserPolicy`` — see DESIGN.md §2
-for why the base model is not the contribution being reproduced.
+tools; the tool surface here is identical — five discrete
+``AdviserTool``s (core/tools.py) run by a ``ToolPipeline`` whose
+decision seat is an ``AdviserPolicy``. The default ``SpecPolicy`` is the
+spec's deterministic rules; swap in a recording/replay policy (or an
+actual LLM) without touching the tools — see DESIGN.md §2 for why the
+base model is not the contribution being reproduced.
+
+Accepted regions carry a cached ``RegionPlan`` (core/plan.py): the
+schedule plus a jit-compiled ``parallel_fn``, reusable across
+benchmarks, figures, examples, and the serving engine.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
-import jax
-import numpy as np
-
 from repro.core import deps as deps_mod
-from repro.core.overlap_model import HwModel, Microtask, OverlapModel, gate
-from repro.core.relic import RelicSchedule, choose_schedule, relic_pfor
+from repro.core.overlap_model import HwModel, OverlapModel
+from repro.core.relic import RelicSchedule
 from repro.core.spec import AIRA_SPEC, PROMPT
+from repro.core.tools import (
+    DEFAULT_TOOLS,
+    AdviserPolicy,
+    SpecPolicy,
+    ToolContext,
+    ToolPipeline,
+)
 
 
 @dataclass
@@ -41,6 +50,7 @@ class Region:
     trace: Optional[deps_mod.MemoryTrace] = None
     restructure: Optional[Callable] = None  # custom parallel impl
     force: bool = False  # bypass the gate (paper's 1-Hop/BVH case)
+    combine: str = "stack"  # how the plan combines per-item results
 
 
 @dataclass
@@ -58,6 +68,7 @@ class RegionDecision:
     schedule: Optional[RelicSchedule]
     predicted_gain: float
     parallel_fn: Optional[Callable] = None
+    plan: Optional[Any] = None  # RegionPlan when accepted via the plan layer
 
     def summary(self) -> str:
         s = "ACCEPT" if self.accepted else "reject"
@@ -81,75 +92,28 @@ class AdviceReport:
 
 
 class Aira:
-    def __init__(self, hw: HwModel | None = None, gate_threshold: float = 0.02):
+    """The adviser: a tool pipeline plus a policy, per the spec."""
+
+    def __init__(
+        self,
+        hw: HwModel | None = None,
+        gate_threshold: float = 0.02,
+        policy: AdviserPolicy | None = None,
+        tools=DEFAULT_TOOLS,
+    ):
         self.hw = hw or HwModel()
         self.model = OverlapModel(self.hw)
         self.gate_threshold = gate_threshold
         self.spec = AIRA_SPEC
+        self.pipeline = ToolPipeline(tools=tools, policy=policy or SpecPolicy())
 
     # ------------------------------------------------------------------
     def advise(self, workload: Workload) -> AdviceReport:
-        decisions = []
-        for region in workload.regions:
-            decisions.append(self._advise_region(region))
+        decisions = [self._advise_region(r) for r in workload.regions]
         return AdviceReport(workload=workload.name, decisions=decisions)
 
     def _advise_region(self, region: Region) -> RegionDecision:
-        log: list[str] = []
-        n_items = jax.tree.leaves(region.items)[0].shape[0]
-
-        # -- static dependence (BOLT analogue) --------------------------
-        sample = jax.tree.map(lambda a: a[0], region.items)
-        srep = deps_mod.static_deps(region.fn, sample)
-        log.append(f"static: {srep.summary()}")
-
-        # -- dynamic dependence (DynamoRIO analogue) ---------------------
-        if region.trace is not None:
-            conflict, why = deps_mod.check_conflicts(region.trace, n_tasks=2)
-            log.append(f"dynamic: {why}")
-            if conflict and not region.force:
-                return RegionDecision(
-                    region.name, log, False, None, 0.0, None
-                )
-        elif not srep.trivially_parallel and not region.force:
-            log.append("dynamic: no trace supplied for non-trivial region → reject")
-            return RegionDecision(region.name, log, False, None, 0.0, None)
-
-        # -- SMT-aware simulation (Sniper gate) --------------------------
-        schedule = choose_schedule(
-            self.model,
-            region.task_flops,
-            region.task_bytes,
-            n_items,
-            chain=region.task_chain,
-            vector=region.vector,
+        ctx = ToolContext(
+            hw=self.hw, model=self.model, gate_threshold=self.gate_threshold
         )
-        pred = schedule.prediction
-        ok, why = gate(pred, self.gate_threshold)
-        log.append(f"simulate: {why} (serial {pred.serial*1e6:.1f}µs, "
-                   f"smt2 {pred.smt2*1e6:.1f}µs, smp2 {pred.smp2*1e6:.1f}µs)")
-        if schedule.strategy == "serial" and not region.force:
-            return RegionDecision(region.name, log, False, schedule, pred.gain("smt2"), None)
-        if not ok and not region.force:
-            return RegionDecision(region.name, log, False, schedule, pred.gain("smt2"), None)
-        if region.force:
-            log.append("force=True: gate bypassed (paper's 1-Hop/BVH scenario)")
-            if schedule.strategy == "serial":
-                schedule = RelicSchedule(
-                    granularity=max(1, n_items // 2),
-                    n_streams=2,
-                    strategy="smt2",
-                    prediction=pred,
-                )
-
-        # -- restructure (Relic analogue) --------------------------------
-        if region.restructure is not None:
-            parallel_fn = region.restructure
-            log.append("restructure: custom Relic implementation")
-        else:
-            g, fn, items = schedule.granularity, region.fn, region.items
-            parallel_fn = lambda: relic_pfor(fn, items, granularity=g)
-            log.append(f"restructure: relic_pfor(gran={g})")
-        return RegionDecision(
-            region.name, log, True, schedule, pred.gain(schedule.strategy), parallel_fn
-        )
+        return self.pipeline.run(region, ctx)

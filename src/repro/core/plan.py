@@ -1,0 +1,231 @@
+"""The execution-plan layer: cached, reusable results of an advisory run.
+
+An advisory run used to end at a throwaway closure — every caller
+(benchmark figure, example, test, serving engine) re-derived and
+re-traced the same restructured region. ``RegionPlan`` makes the
+accepted schedule + its jit-compiled ``parallel_fn`` a first-class,
+cached artifact (DESIGN.md §1):
+
+* Plans are cached by ``PlanKey`` = (region signature, granularity,
+  n_streams, combine, HwModel). The region signature is the region's
+  *name* plus the item pytree's (shape, dtype) structure — the paper's
+  region→source mapping — so re-advising the same region returns the
+  same plan and re-executing it hits jax's jit cache (no retrace).
+* ``advise_suite()`` batch-advises every registered benchmark through
+  the tool pipeline and returns per-benchmark plans; the serving engine
+  accepts a plan for its decode step the same way.
+
+Caveat that follows from keying on the signature rather than on the
+function object: keys include a head/tail content fingerprint of the
+items, but two *different* programs advised under one region name,
+item signature, and identical item boundary values still collide. Use
+distinct region names (as the paper's region→source mapping does) or
+``clear_plan_cache()``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.overlap_model import HwModel
+from repro.core.relic import RelicSchedule, relic_pfor
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    region: str
+    items_sig: tuple  # (treedef_repr, ((shape, dtype), ...))
+    granularity: int
+    n_streams: int
+    combine: str
+    hw: HwModel
+
+
+def items_signature(items) -> tuple:
+    """Structural signature of a region's work items: treedef + per-leaf
+    (shape, dtype). Two item pytrees with equal signatures trace to the
+    same program under the region's fn."""
+    leaves, treedef = jax.tree.flatten(items)
+    return (
+        str(treedef),
+        tuple((tuple(l.shape), str(getattr(l, "dtype", type(l).__name__))) for l in leaves),
+    )
+
+
+@dataclass
+class RegionPlan:
+    """An accepted schedule plus its compiled executor.
+
+    ``execute(items)`` runs the restructured region; the underlying
+    callable is built once per PlanKey, so repeated execution with
+    same-signature items reuses the jit cache (no retrace).
+    """
+
+    key: PlanKey
+    schedule: RelicSchedule
+    fn: Callable  # per-item function captured at plan build
+    cache_state: str = "miss"  # "miss" on build, "hit" when served from cache
+    _compiled: Optional[Callable] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self._compiled is None:
+            g, ns, comb = self.key.granularity, self.key.n_streams, self.key.combine
+            fn = self.fn
+            self._compiled = jax.jit(
+                lambda items: relic_pfor(
+                    fn, items, granularity=g, n_streams=ns, combine=comb
+                )
+            )
+
+    # ------------------------------------------------------------------
+    def execute(self, items):
+        """Run the restructured region on `items` (must match the plan's
+        item signature; anything else retraces or errors)."""
+        return self._compiled(items)
+
+    def thunk(self, items) -> Callable:
+        """A zero-arg executor bound to `items` (the classic
+        ``RegionDecision.parallel_fn`` shape)."""
+        return lambda: self.execute(items)
+
+    def describe(self) -> str:
+        return f"{self.key.region}: {self.schedule.describe()} combine={self.key.combine}"
+
+
+# ---------------------------------------------------------------------------
+# the cache
+
+_PLAN_CACHE: dict[PlanKey, RegionPlan] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    return dict(_STATS, size=len(_PLAN_CACHE))
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _STATS.update(hits=0, misses=0)
+
+
+def _get_or_build(key: PlanKey, schedule: RelicSchedule, fn: Callable) -> RegionPlan:
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _STATS["hits"] += 1
+        plan.cache_state = "hit"
+        return plan
+    _STATS["misses"] += 1
+    plan = _PLAN_CACHE[key] = RegionPlan(key=key, schedule=schedule, fn=fn)
+    return plan
+
+
+def plan_for_region(region, schedule: RelicSchedule, hw: HwModel) -> RegionPlan:
+    """The plan for (region signature, schedule, hw) — cached. The item
+    *content* fingerprint is part of the signature so two same-named,
+    same-shaped regions over different data (e.g. two serving engines
+    with different params, whose prefilled caches are the items) do not
+    alias to one plan."""
+    key = PlanKey(
+        region=region.name,
+        items_sig=items_signature(region.items) + data_fingerprint(region.items),
+        granularity=schedule.granularity,
+        n_streams=schedule.n_streams,
+        combine=getattr(region, "combine", "stack"),
+        hw=hw,
+    )
+    return _get_or_build(key, schedule, region.fn)
+
+
+def data_fingerprint(tree) -> tuple:
+    """Cheap content fingerprint of the arrays a region closes over, so
+    same-signature-but-different-data calls do not share a plan. Samples
+    head/tail elements only — collisions are possible but require
+    identical shapes, dtypes, and boundary values."""
+    import numpy as np
+
+    fp = []
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "dtype") and hasattr(leaf, "ravel"):
+            flat = leaf.ravel()
+            head = np.asarray(flat[:8]).tobytes()
+            tail = np.asarray(flat[-8:]).tobytes()
+            fp.append((str(leaf.dtype), int(flat.shape[0]), hash(head + tail)))
+        else:
+            fp.append(repr(leaf)[:64])
+    return tuple(fp)
+
+
+def plan_for(
+    name: str,
+    fn: Callable,
+    items,
+    *,
+    granularity: int,
+    n_streams: int = 2,
+    combine: str = "stack",
+    hw: HwModel | None = None,
+    schedule: RelicSchedule | None = None,
+    salt: tuple = (),
+) -> RegionPlan:
+    """Manual plan construction (no advisory run) — the path benchmarks
+    use for fixed-granularity restructured execution. ``salt`` extends
+    the cache key (e.g. a ``data_fingerprint`` of closed-over state)."""
+    hw = hw or HwModel()
+    schedule = schedule or RelicSchedule(
+        granularity=granularity, n_streams=n_streams, strategy="smt2"
+    )
+    key = PlanKey(
+        region=name,
+        items_sig=items_signature(items) + tuple(salt),
+        granularity=granularity,
+        n_streams=n_streams,
+        combine=combine,
+        hw=hw,
+    )
+    return _get_or_build(key, schedule, fn)
+
+
+# ---------------------------------------------------------------------------
+# suite-level advisory
+
+
+@dataclass
+class SuiteEntry:
+    """One benchmark's advisory outcome: the decision, the plan (None if
+    rejected), and the built data the region was advised over."""
+
+    benchmark: str
+    decision: Any  # RegionDecision
+    plan: Optional[RegionPlan]
+    data: Any
+
+    @property
+    def accepted(self) -> bool:
+        return self.decision.accepted
+
+
+def advise_suite(
+    hw: HwModel | None = None,
+    *,
+    benchmarks: dict | None = None,
+    gate_threshold: float = 0.02,
+) -> dict[str, SuiteEntry]:
+    """Batch-advise every registered benchmark through the tool pipeline.
+
+    Returns name → SuiteEntry. Repeating the call re-uses cached plans
+    (same region signatures), so the second suite pass performs no jit
+    retracing of restructured regions.
+    """
+    from repro.bench_suite import BENCHMARKS
+    from repro.core.adviser import Aira
+
+    aira = Aira(hw=hw, gate_threshold=gate_threshold)
+    out: dict[str, SuiteEntry] = {}
+    for name, b in (benchmarks if benchmarks is not None else BENCHMARKS).items():
+        data = b.build()
+        report = aira.advise(b.workload(data))
+        d = report.decisions[0]
+        out[name] = SuiteEntry(benchmark=name, decision=d, plan=d.plan, data=data)
+    return out

@@ -59,12 +59,19 @@ def relic_pfor(
     processes its chunks sequentially (lax.scan = the Relic task queue),
     streams are batched (vmap = co-scheduled).
 
-    Returns results in the original item order.
+    combine="stack": results in the original item order (the default).
+    combine="sum": the tree-sum of per-item results over the item axis —
+    each stream accumulates its chunk partials in the scan carry (the
+    Relic reduction-variable idiom), then partials are summed across
+    streams; padding items are masked out of the sum.
     """
+    if combine not in ("stack", "sum"):
+        raise ValueError(f"combine must be 'stack' or 'sum', got {combine!r}")
     leaves = jax.tree.leaves(xs)
     n = leaves[0].shape[0]
     g = max(1, min(granularity, n))
     n_chunks = n // g
+    n_padded = n
     if n_chunks % n_streams or n % g:
         # pad items to streams×granularity boundary
         target = ((n + g * n_streams - 1) // (g * n_streams)) * g * n_streams
@@ -74,6 +81,7 @@ def relic_pfor(
             xs,
         )
         n_chunks = target // g
+        n_padded = target
 
     per_stream = n_chunks // n_streams
     # [n_items,...] → [n_streams, per_stream, g, ...] (round-robin deal)
@@ -82,6 +90,32 @@ def relic_pfor(
         return a.reshape(per_stream, n_streams, g, *a.shape[2:]).swapaxes(0, 1)
 
     xs_dealt = jax.tree.map(deal, xs)
+
+    if combine == "sum":
+        valid = deal(jnp.arange(n_padded) < n)  # [streams, per_stream, g]
+        item_struct = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[3:], a.dtype), xs_dealt
+        )
+        out_struct = jax.eval_shape(fn, item_struct)
+
+        def stream_sum(stream_chunks, stream_valid):
+            def step(acc, chunk_mask):
+                chunk, m = chunk_mask
+                ys = jax.vmap(fn)(chunk)
+                part = jax.tree.map(
+                    lambda y: jnp.where(
+                        m.reshape((g,) + (1,) * (y.ndim - 1)), y, jnp.zeros_like(y)
+                    ).sum(axis=0),
+                    ys,
+                )
+                return jax.tree.map(jnp.add, acc, part), None
+
+            zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), out_struct)
+            acc, _ = jax.lax.scan(step, zero, (stream_chunks, stream_valid))
+            return acc
+
+        partials = jax.vmap(stream_sum)(xs_dealt, valid)  # co-scheduled streams
+        return jax.tree.map(lambda a: a.sum(axis=0), partials)
 
     def stream_fn(stream_chunks):  # sequential task queue of one stream
         def step(_, chunk):

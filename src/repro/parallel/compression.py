@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 
 def _quantize(g, scale):
     q = jnp.clip(jnp.round(g / scale), -127, 127)
@@ -30,7 +32,7 @@ def compressed_psum(g, axis_name: str, err):
     as g; zeros initially). Call inside shard_map/pjit with `axis_name`
     bound.
     """
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     g_fb = g + err
     scale = jnp.maximum(jnp.max(jnp.abs(g_fb)) / 127.0, 1e-12)
     # share one scale so the reduced payload dequantizes exactly

@@ -5,6 +5,13 @@ that is the decode loop. The engine runs continuous batched decoding with
 per-request latency accounting (p50/p99), greedy or temperature sampling,
 and exposes ``serve_step`` — the function the multi-pod dry-run lowers
 for the decode_* / long_* shapes.
+
+Serving is also an *advisable workload*: ``decode_region`` exposes one
+decode step as an Aira ``Region`` whose work items are the concurrent
+requests (per-request KV-cache slices are disjoint by construction, so
+the dynamic-dependence stage clears), and ``set_decode_plan`` accepts
+the resulting ``RegionPlan`` so the decode step runs through the plan's
+compiled co-scheduled restructuring (DESIGN.md §1).
 """
 from __future__ import annotations
 
@@ -32,14 +39,135 @@ class ServeStats:
 
 
 class ServingEngine:
-    def __init__(self, model, params, *, max_seq: int, temperature: float = 0.0):
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        max_seq: int,
+        temperature: float = 0.0,
+        decode_plan=None,
+    ):
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.temperature = temperature
         self._prefill = jax.jit(lambda p, t, **kw: model.prefill(p, t, max_seq, **kw))
         self._decode = jax.jit(model.decode_step)
+        self._decode_plan = None
+        self._plan_step = None
         self.stats = ServeStats()
+        if decode_plan is not None:
+            self.set_decode_plan(decode_plan)
+
+    # ------------------------------------------------------------------
+    # the decode step as an advisable region (requests = work items)
+
+    def _decode_cache_spec(self, cache):
+        """(treedef, per-leaf batch-axis index) of the decode cache."""
+        leaves, treedef = jax.tree.flatten(cache)
+        logical = jax.tree.flatten(
+            self.model.cache_axes(cache), is_leaf=lambda x: isinstance(x, tuple)
+        )[0]
+        axes = tuple(t.index("batch") if "batch" in t else 0 for t in logical)
+        assert len(axes) == len(leaves)
+        return treedef, axes
+
+    def _per_request_decode(self, treedef, axes):
+        """Per-item fn over (token, batchless cache leaves): one request's
+        decode step — what relic_pfor co-schedules across requests."""
+        model, params = self.model, self.params
+
+        def fn(item):
+            tok, leaves = item
+            cache = jax.tree.unflatten(
+                treedef, [jnp.expand_dims(l, ax) for l, ax in zip(leaves, axes)]
+            )
+            logits, new_cache = model.decode_step(params, cache, tok.reshape(1, 1))
+            new_leaves = [
+                jnp.moveaxis(l, ax, 0)[0]
+                for l, ax in zip(jax.tree.leaves(new_cache), axes)
+            ]
+            return logits[0], new_leaves
+
+        return fn
+
+    def _decode_items(self, cache, tok, axes):
+        leaves = jax.tree.leaves(cache)
+        return (tok, [jnp.moveaxis(l, ax, 0) for l, ax in zip(leaves, axes)])
+
+    def decode_region(
+        self,
+        prompts: jax.Array,
+        *,
+        name: str = "serve-decode",
+        task_flops: Optional[float] = None,
+        task_bytes: Optional[float] = None,
+        task_chain: int = 0,
+        force: bool = False,
+    ):
+        """Expose one decode step as an Aira ``Region``.
+
+        Items are the batch of concurrent requests. The attached dynamic
+        trace records each request touching only its own cache slice
+        (disjoint by construction), so the dependence stages clear and
+        the overlap gate decides. Default napkin cost: weight-streaming
+        decode — 2·n_params FLOPs and n_params·4 bytes per request-token
+        (batched decode is bandwidth-bound, which is exactly why the
+        gate usually says no and latency-critical deployments ``force``).
+        """
+        from repro.core.adviser import Region
+        from repro.core.deps import MemoryTrace
+
+        logits, cache = self._prefill(self.params, prompts)
+        tok = self._sample(logits, jax.random.key(0))
+        treedef, axes = self._decode_cache_spec(cache)
+        items = self._decode_items(cache, tok, axes)
+        n_params = sum(l.size for l in jax.tree.leaves(self.params))
+        batch = int(tok.shape[0])
+        trace = MemoryTrace(
+            reads=[[i] for i in range(batch)], writes=[[i] for i in range(batch)]
+        )
+        return Region(
+            name=name,
+            fn=self._per_request_decode(treedef, axes),
+            items=items,
+            task_flops=2.0 * n_params if task_flops is None else task_flops,
+            task_bytes=4.0 * n_params if task_bytes is None else task_bytes,
+            task_chain=task_chain,
+            vector=False,
+            trace=trace,
+            force=force,
+        )
+
+    def set_decode_plan(self, plan) -> None:
+        """Route the decode step through an accepted ``RegionPlan`` (as
+        produced by advising ``decode_region`` — stack combine)."""
+        if plan is not None and plan.key.combine != "stack":
+            raise ValueError("decode plan must preserve per-request order (combine='stack')")
+        self._decode_plan = plan
+        self._plan_step = None  # rebuilt lazily against the cache spec
+
+    def _plan_decode(self, cache, tok):
+        if self._plan_step is None:
+            # the cache spec is invariant across steps: derive it once and
+            # fold the batch-axis shuffling into one jitted step so the
+            # per-token path stays a single dispatch
+            treedef, axes = self._decode_cache_spec(cache)
+            plan = self._decode_plan
+
+            def step(cache, tok):
+                leaves = jax.tree.leaves(cache)
+                items = (tok, [jnp.moveaxis(l, ax, 0) for l, ax in zip(leaves, axes)])
+                logits, new_leaves = plan.execute(items)
+                new_cache = jax.tree.unflatten(
+                    treedef,
+                    [jnp.moveaxis(l, 0, ax) for l, ax in zip(new_leaves, axes)],
+                )
+                return logits, new_cache
+
+            self._plan_step = jax.jit(step)
+        return self._plan_step(cache, tok)
 
     # ------------------------------------------------------------------
     def _sample(self, logits, key):
@@ -59,7 +187,10 @@ class ServingEngine:
         for i in range(n_steps):
             out.append(tok)
             t0 = time.perf_counter()
-            logits, cache = self._decode(self.params, cache, tok[:, None])
+            if self._decode_plan is not None:
+                logits, cache = self._plan_decode(cache, tok)
+            else:
+                logits, cache = self._decode(self.params, cache, tok[:, None])
             logits.block_until_ready()
             self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
             key, sub = jax.random.split(key)

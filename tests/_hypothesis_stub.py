@@ -1,0 +1,72 @@
+"""Deterministic stand-in for the slice of hypothesis the suite uses.
+
+The container may not ship hypothesis; rather than skip the property
+tests, this shim runs each one over the strategy corners (lo/hi or the
+full sampled_from list) plus seeded-random interior samples, honoring
+``max_examples``. Shrinking, stateful testing, etc. are out of scope —
+install real hypothesis to get them.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw, edges=()):
+        self._draw = draw
+        self.edges = list(edges)
+
+    def example(self, rng, i):
+        if i < len(self.edges):
+            return self.edges[i]
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: rng.randint(min_value, max_value),
+            edges=[min_value, max_value],
+        )
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: rng.uniform(min_value, max_value),
+            edges=[min_value, max_value],
+        )
+
+    @staticmethod
+    def sampled_from(elements):
+        xs = list(elements)
+        return _Strategy(lambda rng: xs[rng.randrange(len(xs))], edges=xs)
+
+
+st = strategies
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # no functools.wraps: pytest must NOT see the drawn parameters
+        # (it would look for same-named fixtures)
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = random.Random(1234)
+            for i in range(n):
+                drawn = {k: s.example(rng, i) for k, s in strats.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

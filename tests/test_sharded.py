@@ -24,9 +24,12 @@ HEADER = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+try:
+    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+except AttributeError:  # jax 0.4.x: no AxisType
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
 """
 
 

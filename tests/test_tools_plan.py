@@ -1,0 +1,254 @@
+"""Tool pipeline + plan layer: golden decisions, policy seam, plan cache
+(no retrace on repeated advise/execute), suite advisory, serving hook."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aira,
+    RecordingPolicy,
+    Region,
+    ReplayPolicy,
+    SpecPolicy,
+    ToolPipeline,
+    Workload,
+    advise_suite,
+    clear_plan_cache,
+    plan_cache_stats,
+)
+from repro.core.overlap_model import CPU_HW
+from repro.core.tools import CONTINUE, STOP, StageResult
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_aira_decisions.json")
+
+
+# ---------------------------------------------------------------------------
+# golden: the pipeline must reproduce the pre-refactor adviser's decisions
+
+
+def test_golden_suite_decisions():
+    """Every benchmark's accept/reject decision (and chosen schedule)
+    matches the checked-in pre-refactor baseline."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    suite = advise_suite(hw=CPU_HW)
+    assert set(suite) == set(golden)
+    for name, want in golden.items():
+        d = suite[name].decision
+        assert d.accepted == want["accepted"], (name, d.stage_log)
+        assert d.schedule.strategy == want["strategy"], name
+        assert d.schedule.granularity == want["granularity"], name
+        np.testing.assert_allclose(
+            d.predicted_gain, want["predicted_gain"], atol=1e-5, err_msg=name
+        )
+        # accepted decisions carry a cached plan; rejected ones do not
+        assert (suite[name].plan is not None) == want["accepted"], name
+
+
+def test_suite_advise_twice_hits_plan_cache():
+    clear_plan_cache()
+    s1 = advise_suite(hw=CPU_HW)
+    stats1 = plan_cache_stats()
+    assert stats1["misses"] > 0
+    s2 = advise_suite(hw=CPU_HW)
+    stats2 = plan_cache_stats()
+    assert stats2["misses"] == stats1["misses"]  # no new plan builds
+    assert stats2["hits"] >= stats1["hits"] + stats1["misses"]
+    for name in s1:
+        if s1[name].plan is not None:
+            assert s2[name].plan is s1[name].plan, name
+
+
+# ---------------------------------------------------------------------------
+# plan cache: repeated advise + execute must not retrace
+
+
+def _accepted_region(fn, items, name="trace-count"):
+    # chain-heavy VPU microtask: comfortably inside the smt2 band
+    return Region(
+        name, fn, items, task_flops=100.0, task_bytes=512.0, task_chain=16
+    )
+
+
+def test_plan_cache_no_second_jit_trace():
+    clear_plan_cache()
+    traces = []
+
+    def fn(x):  # python side effect runs at TRACE time only
+        traces.append(1)
+        return 2.0 * x + 1.0
+
+    items = jnp.arange(4096, dtype=jnp.float32)
+    aira = Aira(hw=CPU_HW)
+
+    d1 = aira.advise(Workload("w", lambda: None, [_accepted_region(fn, items)])).decisions[0]
+    assert d1.accepted and d1.plan is not None
+    jax.block_until_ready(d1.plan.execute(items))
+    n_traces = len(traces)
+    assert n_traces >= 1
+
+    # second advisory run: same region signature → cached plan, and
+    # executing it again does not retrace the restructured program
+    d2 = aira.advise(Workload("w", lambda: None, [_accepted_region(fn, items)])).decisions[0]
+    assert d2.plan is d1.plan
+    jax.block_until_ready(d2.plan.execute(items))
+    jax.block_until_ready(d2.parallel_fn())
+    assert len(traces) == n_traces, "plan execution retraced the region"
+
+
+def test_plan_executes_on_fresh_same_signature_items():
+    clear_plan_cache()
+    fn = lambda x: (x * 3.0).sum()
+    items = jnp.arange(256, dtype=jnp.float32).reshape(64, 4)
+    aira = Aira(hw=CPU_HW)
+    d = aira.advise(Workload("w", lambda: None, [_accepted_region(fn, items)])).decisions[0]
+    assert d.accepted
+    fresh = items + 7.0
+    np.testing.assert_allclose(
+        np.asarray(d.plan.execute(fresh)),
+        np.asarray(jax.vmap(fn)(fresh)),
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# policy seam
+
+
+def test_recording_then_replay_policy():
+    fn = lambda x: x * 2.0
+    items = jnp.arange(1024, dtype=jnp.float32)
+    region = _accepted_region(fn, items, name="rec")
+
+    rec = RecordingPolicy(SpecPolicy())
+    d1 = Aira(hw=CPU_HW, policy=rec).advise(Workload("w", lambda: None, [region])).decisions[0]
+    assert d1.accepted
+    stages = [stage for (_, stage, _, _) in rec.record]
+    assert stages == ["profile", "static", "dynamic", "simulate", "restructure"]
+    assert all(action == CONTINUE for (_, _, _, action) in rec.record)
+
+    d2 = Aira(hw=CPU_HW, policy=ReplayPolicy(rec.record)).advise(
+        Workload("w", lambda: None, [region])
+    ).decisions[0]
+    assert d2.accepted == d1.accepted
+    assert d2.schedule.granularity == d1.schedule.granularity
+
+
+def test_replay_policy_can_override_verdicts():
+    """A replayed STOP at the simulate stage rejects a region the spec
+    rules would accept — the decision seat is genuinely swappable."""
+    fn = lambda x: x * 2.0
+    items = jnp.arange(1024, dtype=jnp.float32)
+    region = _accepted_region(fn, items, name="override")
+    record = [
+        ("override", "profile", "pass", CONTINUE),
+        ("override", "static", "pass", CONTINUE),
+        ("override", "dynamic", "skip", CONTINUE),
+        ("override", "simulate", "pass", STOP),
+    ]
+    d = Aira(hw=CPU_HW, policy=ReplayPolicy(record)).advise(
+        Workload("w", lambda: None, [region])
+    ).decisions[0]
+    assert not d.accepted
+    assert d.schedule is not None  # simulate ran before the stop
+
+
+def test_replay_policy_detects_divergence():
+    fn = lambda x: x * 2.0
+    items = jnp.arange(1024, dtype=jnp.float32)
+    region = _accepted_region(fn, items, name="diverge")
+    record = [("some-other-region", "profile", "pass", CONTINUE)]
+    with pytest.raises(ValueError, match="ReplayPolicy"):
+        Aira(hw=CPU_HW, policy=ReplayPolicy(record)).advise(
+            Workload("w", lambda: None, [region])
+        )
+
+
+def test_pipeline_force_overrides_policy_stop():
+    table = jnp.zeros((64,))
+
+    def fn(i):  # shared scatter, no trace → dynamic reject
+        return table.at[i].add(1.0).sum()
+
+    items = jnp.arange(32, dtype=jnp.int32)
+    region = Region("forced", fn, items, task_flops=64, task_bytes=512,
+                    task_chain=4, force=True)
+    d = Aira(hw=CPU_HW).advise(Workload("w", lambda: None, [region])).decisions[0]
+    assert d.accepted
+    assert any("force=True" in s for s in d.stage_log)
+
+
+# ---------------------------------------------------------------------------
+# serving: the decode step is an advisable workload
+
+
+def test_serving_decode_plan_matches_plain_decode():
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import ServingEngine
+
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params, _ = m.init(jax.random.key(0))
+    prompts = jnp.ones((4, 8), jnp.int32)
+
+    eng = ServingEngine(m, params, max_seq=64)
+    region = eng.decode_region(prompts, force=True)
+    d = Aira().advise(Workload("serve", lambda: None, [region])).decisions[0]
+    assert d.accepted and d.plan is not None
+    # the honest outcome: batched decode is bandwidth-bound, the gate
+    # says no, and the latency-critical deployment force-applies
+    assert any("force=True" in s for s in d.stage_log)
+
+    out_plain = ServingEngine(m, params, max_seq=64).generate(prompts, n_steps=4)
+    eng2 = ServingEngine(m, params, max_seq=64, decode_plan=d.plan)
+    out_plan = eng2.generate(prompts, n_steps=4)
+    np.testing.assert_array_equal(np.asarray(out_plain), np.asarray(out_plan))
+    assert eng2.stats.percentile(50) > 0
+
+
+def test_two_engines_do_not_alias_plans():
+    """Same region name + item shapes but different params: the content
+    fingerprint in the plan key must keep the plans (and weights) apart."""
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import ServingEngine
+
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    p1, _ = m.init(jax.random.key(0))
+    p2, _ = m.init(jax.random.key(99))
+    prompts = jnp.ones((4, 8), jnp.int32)
+    clear_plan_cache()
+    e1 = ServingEngine(m, p1, max_seq=64)
+    e2 = ServingEngine(m, p2, max_seq=64)
+    d1 = Aira().advise(
+        Workload("s", lambda: None, [e1.decode_region(prompts, force=True)])
+    ).decisions[0]
+    d2 = Aira().advise(
+        Workload("s", lambda: None, [e2.decode_region(prompts, force=True)])
+    ).decisions[0]
+    assert d1.plan is not d2.plan
+    e2.set_decode_plan(d2.plan)
+    out_plan = e2.generate(prompts, n_steps=3)
+    out_plain = ServingEngine(m, p2, max_seq=64).generate(prompts, n_steps=3)
+    np.testing.assert_array_equal(np.asarray(out_plan), np.asarray(out_plain))
+
+
+def test_serving_rejects_sum_combine_plan():
+    from repro.core.plan import plan_for
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import ServingEngine
+
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params, _ = m.init(jax.random.key(0))
+    eng = ServingEngine(m, params, max_seq=64)
+    bad = plan_for("bad", lambda x: x, jnp.arange(4.0), granularity=1, combine="sum")
+    with pytest.raises(ValueError, match="stack"):
+        eng.set_decode_plan(bad)
