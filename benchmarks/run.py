@@ -5,6 +5,8 @@
   §Roofline    per-(arch × shape) roofline terms from the dry-run
   µbench       CPU wall-clock of each benchmark's serial JAX kernel
                (``name,us_per_call,derived`` CSV)
+  §Serving     open-loop Poisson-arrival load on the continuous-batching
+               serving core (p50/p99 TTFT, per-token latency)
 
 Every run writes ``BENCH_aira.json`` — per-benchmark predicted/realized
 gain plus the µbench wall-clock — so the perf trajectory is machine-
@@ -42,9 +44,11 @@ def _microbench(print_fn=print, reps: int = 5) -> dict[str, float]:
     return out
 
 
-def write_summary(rows, gm_pos, gm_all, ubench_us, path="BENCH_aira.json") -> None:
+def write_summary(rows, gm_pos, gm_all, ubench_us, serving=None, path="BENCH_aira.json") -> None:
     """Machine-readable per-PR perf summary (predicted gains are the
-    calibrated overlap model; µbench is measured CPU wall-clock)."""
+    calibrated overlap model; µbench is measured CPU wall-clock;
+    ``serving`` is the open-loop load test's p50/p99 TTFT + per-token
+    latency from benchmarks/serving_load.py)."""
     summary = {
         "benchmarks": [
             {
@@ -60,6 +64,8 @@ def write_summary(rows, gm_pos, gm_all, ubench_us, path="BENCH_aira.json") -> No
         "geomean_positive": gm_pos,
         "geomean_all_discard_negative": gm_all,
     }
+    if serving is not None:
+        summary["serving"] = serving
     with open(path, "w") as f:
         json.dump(summary, f, indent=2, default=float)
     print(f"wrote {path}")
@@ -67,7 +73,7 @@ def write_summary(rows, gm_pos, gm_all, ubench_us, path="BENCH_aira.json") -> No
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    from benchmarks import fig12_granularity, fig34_aira, roofline
+    from benchmarks import fig12_granularity, fig34_aira, roofline, serving_load
 
     fig12_granularity.run()
     print()
@@ -76,7 +82,11 @@ def main() -> None:
     roofline.run()
     print()
     ubench_us = _microbench(reps=2 if fast else 5)
-    write_summary(rows, gm_pos, gm_all, ubench_us)
+    print()
+    serving = serving_load.run(
+        n_requests=6 if fast else 12, tokens=4 if fast else 8
+    )
+    write_summary(rows, gm_pos, gm_all, ubench_us, serving=serving)
 
 
 if __name__ == "__main__":

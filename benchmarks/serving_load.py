@@ -1,0 +1,68 @@
+"""§Serving — open-loop Poisson-arrival load on the continuous-batching
+serving core: p50/p99 TTFT and per-token decode latency.
+
+Open-loop means arrivals follow their own (Poisson) schedule regardless
+of completions — the honest way to load a latency-critical server,
+since closed-loop drivers self-throttle and hide queueing delay. Each
+request gets a random prompt length and token budget, so the run
+exercises divergent per-slot cache lengths and slot reuse.
+
+Feeds the ``serving`` section of ``BENCH_aira.json`` (benchmarks/run.py)
+so serving latency is tracked across PRs. Request generation lives in
+``repro.serve.load`` (shared with examples/serve_decode.py).
+
+Usage: PYTHONPATH=src python -m benchmarks.serving_load
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def run(
+    *,
+    arch: str = "smollm-135m",
+    n_requests: int = 12,
+    rate_rps: float = 20.0,
+    max_batch: int = 4,
+    tokens: int = 8,
+    seed: int = 0,
+    print_fn=print,
+) -> dict:
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import ServingEngine
+    from repro.serve.load import make_requests
+
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params, _ = model.init(jax.random.key(seed))
+    engine = ServingEngine(model, params, max_seq=64)
+    rng = np.random.default_rng(seed)
+    reqs = make_requests(
+        n_requests, rate_rps, vocab=cfg.vocab_size, max_new_tokens=tokens, rng=rng
+    )
+    outputs = engine.serve(reqs, max_batch=max_batch, seed=seed)
+    assert all(r.finished for r in reqs)
+    assert all(len(outputs[r.rid]) == len(r.tokens) for r in reqs)
+
+    summary = dict(
+        engine.stats.serving_summary(),
+        arch=arch,
+        rate_rps=rate_rps,
+        max_batch=max_batch,
+    )
+    print_fn("# serving — open-loop Poisson arrivals (continuous batching)")
+    print_fn(
+        f"arch={arch} requests={n_requests} rate={rate_rps}/s pool={max_batch}"
+    )
+    print_fn(
+        f"ttft p50={summary['p50_ttft_ms']:.2f}ms p99={summary['p99_ttft_ms']:.2f}ms | "
+        f"tpot p50={summary['p50_tpot_ms']:.2f}ms p99={summary['p99_tpot_ms']:.2f}ms | "
+        f"step p50={summary['p50_step_ms']:.2f}ms p99={summary['p99_step_ms']:.2f}ms"
+    )
+    return summary
+
+
+if __name__ == "__main__":
+    run()

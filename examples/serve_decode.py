@@ -1,17 +1,29 @@
-"""Latency-critical serving example: batched greedy decoding with
-per-step latency percentiles — optionally with the int8 KV cache, and
-optionally advised by Aira (``--aira`` exposes the decode step as a
-Region, advises it, and routes decoding through the accepted
-RegionPlan).
+"""Latency-critical serving example on the continuous-batching core.
+
+Two modes:
+
+* fixed batch (default): ``generate()`` decodes a full batch through the
+  slot-pool scheduler and prints per-step latency percentiles;
+* open loop (``--open-loop N``): N requests with Poisson arrivals
+  (``--rate`` req/s), random prompt lengths, and random token budgets
+  are admitted into a ``--batch``-slot pool as slots free up — the
+  continuous-batching path — and per-request TTFT percentiles are
+  reported.
+
+Either mode optionally runs with the int8 KV cache, and optionally
+advised by Aira (``--aira`` exposes the decode step as a Region, advises
+it, and routes decoding through the accepted RegionPlan — masked over
+the active slots in open-loop mode).
 
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
-      [--int8-kv] [--tokens 32] [--aira]
+      [--int8-kv] [--tokens 32] [--batch 4] [--aira]
+      [--open-loop 8] [--rate 20]
 """
 import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import Model
@@ -22,10 +34,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="zamba2-2.7b")
     ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="fixed batch size / open-loop slot-pool size")
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--aira", action="store_true",
                     help="advise the decode step and serve through its RegionPlan")
+    ap.add_argument("--open-loop", type=int, default=0, metavar="N",
+                    help="serve N Poisson-arrival requests instead of one fixed batch")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="open-loop arrival rate (requests/second)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -48,10 +65,30 @@ def main():
             engine.set_decode_plan(d.plan)
             print("decode routed through RegionPlan:", d.plan.describe())
 
-    out = engine.generate(prompts, args.tokens)
     print(f"arch={args.arch} int8_kv={args.int8_kv} aira={args.aira}")
-    print(f"generated {out.shape} tokens; first row: {out[0][:12].tolist()}")
-    print(f"decode latency: {engine.stats.summary()}")
+    if args.open_loop > 0:
+        from repro.serve.load import make_requests
+
+        reqs = make_requests(
+            args.open_loop,
+            args.rate,
+            vocab=cfg.vocab_size,
+            max_new_tokens=args.tokens,
+            rng=np.random.default_rng(0),
+        )
+        outputs = engine.serve(reqs, max_batch=args.batch)
+        for r in reqs:
+            print(
+                f"  req {r.rid}: arrive={r.arrival_time*1e3:7.1f}ms "
+                f"prompt={len(np.asarray(r.prompt)):2d} tokens={len(r.tokens):2d} "
+                f"ttft={r.ttft_ms:7.1f}ms e2e={r.e2e_ms:7.1f}ms"
+            )
+        assert all(len(outputs[r.rid]) == len(r.tokens) for r in reqs)
+        print(f"open-loop serving: {engine.stats.summary()}")
+    else:
+        out = engine.generate(prompts, args.tokens)
+        print(f"generated {out.shape} tokens; first row: {out[0][:12].tolist()}")
+        print(f"decode latency: {engine.stats.summary()}")
 
 
 if __name__ == "__main__":

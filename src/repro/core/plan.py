@@ -68,6 +68,7 @@ class RegionPlan:
     fn: Callable  # per-item function captured at plan build
     cache_state: str = "miss"  # "miss" on build, "hit" when served from cache
     _compiled: Optional[Callable] = field(default=None, repr=False)
+    _compiled_masked: Optional[Callable] = field(default=None, repr=False)
 
     def __post_init__(self):
         if self._compiled is None:
@@ -84,6 +85,24 @@ class RegionPlan:
         """Run the restructured region on `items` (must match the plan's
         item signature; anything else retraces or errors)."""
         return self._compiled(items)
+
+    def execute_masked(self, items, valid):
+        """Masked fixed-shape execution over a *padded active set*: `items`
+        span every slot of a fixed pool, `valid` marks the live ones. The
+        mask is data, not shape, so one jit trace serves any live count —
+        continuous-batching serving never retraces as requests come and
+        go. Invalid rows are zeroed ("stack") or excluded from the
+        reduction ("sum"); the masked executor is compiled lazily on
+        first use and cached alongside the unmasked one."""
+        if self._compiled_masked is None:
+            g, ns, comb = self.key.granularity, self.key.n_streams, self.key.combine
+            fn = self.fn
+            self._compiled_masked = jax.jit(
+                lambda items, valid: relic_pfor(
+                    fn, items, granularity=g, n_streams=ns, combine=comb, valid=valid
+                )
+            )
+        return self._compiled_masked(items, valid)
 
     def thunk(self, items) -> Callable:
         """A zero-arg executor bound to `items` (the classic

@@ -50,6 +50,7 @@ def relic_pfor(
     granularity: int,
     n_streams: int = 2,
     combine: str = "stack",
+    valid=None,
 ):
     """Item-parallel region → co-scheduled chunk streams.
 
@@ -64,11 +65,20 @@ def relic_pfor(
     each stream accumulates its chunk partials in the scan carry (the
     Relic reduction-variable idiom), then partials are summed across
     streams; padding items are masked out of the sum.
+
+    valid: optional [n_items] boolean mask for fixed-shape execution over
+    a *padded active set* (a serving slot pool where only some slots hold
+    live requests). Invalid items still flow through ``fn`` — the traced
+    shape stays static, so one jit trace serves any live count — but
+    their rows are zeroed in "stack" results and excluded from "sum"
+    reductions.
     """
     if combine not in ("stack", "sum"):
         raise ValueError(f"combine must be 'stack' or 'sum', got {combine!r}")
     leaves = jax.tree.leaves(xs)
     n = leaves[0].shape[0]
+    if valid is not None:
+        valid = jnp.asarray(valid).reshape((n,)).astype(bool)
     g = max(1, min(granularity, n))
     n_chunks = n // g
     n_padded = n
@@ -80,6 +90,8 @@ def relic_pfor(
             lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], axis=0),
             xs,
         )
+        if valid is not None:
+            valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
         n_chunks = target // g
         n_padded = target
 
@@ -92,7 +104,10 @@ def relic_pfor(
     xs_dealt = jax.tree.map(deal, xs)
 
     if combine == "sum":
-        valid = deal(jnp.arange(n_padded) < n)  # [streams, per_stream, g]
+        keep = jnp.arange(n_padded) < n
+        if valid is not None:
+            keep = keep & valid
+        valid_dealt = deal(keep)  # [streams, per_stream, g]
         item_struct = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape[3:], a.dtype), xs_dealt
         )
@@ -114,7 +129,7 @@ def relic_pfor(
             acc, _ = jax.lax.scan(step, zero, (stream_chunks, stream_valid))
             return acc
 
-        partials = jax.vmap(stream_sum)(xs_dealt, valid)  # co-scheduled streams
+        partials = jax.vmap(stream_sum)(xs_dealt, valid_dealt)  # co-scheduled streams
         return jax.tree.map(lambda a: a.sum(axis=0), partials)
 
     def stream_fn(stream_chunks):  # sequential task queue of one stream
@@ -131,7 +146,16 @@ def relic_pfor(
         a = a.swapaxes(0, 1).reshape(n_chunks * g, *a.shape[3:])
         return a[:n]
 
-    return jax.tree.map(undeal, ys)
+    ys = jax.tree.map(undeal, ys)
+    if valid is not None:
+        live = valid[:n]
+        ys = jax.tree.map(
+            lambda y: jnp.where(
+                live.reshape((n,) + (1,) * (y.ndim - 1)), y, jnp.zeros_like(y)
+            ),
+            ys,
+        )
+    return ys
 
 
 def choose_schedule(

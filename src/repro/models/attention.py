@@ -163,6 +163,30 @@ def _triangular_attention(q, k, v, n_rep, scale, chunk, rules):
 # decode
 
 
+def scatter_token(stack, new, cache_len, layer_idx):
+    """Append one token per batch row into a layer-stacked cache, each row
+    at its *own* length. ``stack`` [L,B,Smax,...]; ``new`` [B,1,...];
+    ``cache_len`` [B]. Under continuous batching the batch rows are slots
+    of different requests decoding at divergent positions, so the write
+    position is per-row — not the shared ``cache_len[0]`` a fixed batch
+    would allow."""
+    zero = jnp.int32(0)
+
+    def one(stack_b, new_b, pos):
+        start = (layer_idx, pos) + (zero,) * (stack_b.ndim - 2)
+        return jax.lax.dynamic_update_slice(stack_b, new_b[None], start)
+
+    return jax.vmap(one, in_axes=(1, 0, 0), out_axes=1)(stack, new, cache_len)
+
+
+def scatter_token_flat(cache, new, cache_len):
+    """Per-row single-token append for a per-layer (non-stacked) cache:
+    ``cache`` [B,Smax,...]; ``new`` [B,1,...]; ``cache_len`` [B]."""
+    return jax.vmap(
+        lambda cb, nb, pos: jax.lax.dynamic_update_slice_in_dim(cb, nb, pos, axis=0)
+    )(cache, new, cache_len)
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, rules=None):
     """One-token attention over a (possibly seq-sharded) KV cache.
 
@@ -253,14 +277,12 @@ def attention_block(
         # int8-quantized stacked cache: (k_all int8, k_scale, v_all int8,
         # v_scale, layer_idx). Reads move half the bytes of bf16.
         k_all, ks_all, v_all, vs_all, li = cache
-        pos = cache_len[0]
-        zero = jnp.int32(0)
         k_q, k_s = quantize_kv(k)
         v_q, v_s = quantize_kv(v)
-        k_all = jax.lax.dynamic_update_slice(k_all, k_q[None], (li, zero, pos, zero, zero))
-        ks_all = jax.lax.dynamic_update_slice(ks_all, k_s[None], (li, zero, pos, zero))
-        v_all = jax.lax.dynamic_update_slice(v_all, v_q[None], (li, zero, pos, zero, zero))
-        vs_all = jax.lax.dynamic_update_slice(vs_all, v_s[None], (li, zero, pos, zero))
+        k_all = scatter_token(k_all, k_q, cache_len, li)
+        ks_all = scatter_token(ks_all, k_s, cache_len, li)
+        v_all = scatter_token(v_all, v_q, cache_len, li)
+        vs_all = scatter_token(vs_all, v_s, cache_len, li)
         k_cache = dequantize_kv(
             jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False),
             jax.lax.dynamic_index_in_dim(ks_all, li, 0, keepdims=False),
@@ -282,10 +304,8 @@ def attention_block(
         k_all, v_all, li = cache
         k_all = constrain(rules, k_all, (None, "batch", "kv_seq", "kv_heads", None))
         v_all = constrain(rules, v_all, (None, "batch", "kv_seq", "kv_heads", None))
-        pos = cache_len[0]
-        zero = jnp.int32(0)
-        k_all = jax.lax.dynamic_update_slice(k_all, k[None], (li, zero, pos, zero, zero))
-        v_all = jax.lax.dynamic_update_slice(v_all, v[None], (li, zero, pos, zero, zero))
+        k_all = scatter_token(k_all, k, cache_len, li)
+        v_all = scatter_token(v_all, v, cache_len, li)
         k_cache = jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False)
         v_cache = jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False)
         out = decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
@@ -294,10 +314,9 @@ def attention_block(
         k_cache, v_cache = cache
         k_cache = constrain(rules, k_cache, ("batch", "kv_seq", "kv_heads", None))
         v_cache = constrain(rules, v_cache, ("batch", "kv_seq", "kv_heads", None))
-        # insert the new token at cache_len (per batch row same position)
-        pos = cache_len[0]
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+        # insert the new token at each row's own cache_len
+        k_cache = scatter_token_flat(k_cache, k, cache_len)
+        v_cache = scatter_token_flat(v_cache, v, cache_len)
         out = decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
         new_kv = (k_cache, v_cache)
 

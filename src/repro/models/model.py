@@ -334,6 +334,39 @@ class Model:
 
         return jax.tree_util.tree_map_with_path(leaf_axes, cache)
 
+    def cache_batch_axes(self, cache):
+        """Per-leaf batch-axis index of the decode cache, derived from the
+        ``cache_axes`` logical names (leaves without an explicit 'batch'
+        axis — ``len`` — are batch-leading). The serving slot pool and the
+        decode Region both slice per-request views through this, so slot
+        logic is family-agnostic."""
+        return jax.tree.map(
+            lambda t: t.index("batch") if "batch" in t else 0,
+            self.cache_axes(cache),
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+    def read_cache_slot(self, pool, slot):
+        """Batch slot ``slot`` of a pooled decode cache as a batch=1 cache."""
+        return jax.tree.map(
+            lambda leaf, ax: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax),
+            pool,
+            self.cache_batch_axes(pool),
+        )
+
+    def write_cache_slot(self, pool, slot_cache, slot):
+        """Write a batch=1 cache (e.g. one request's prefill output) into
+        batch slot ``slot`` of a pooled decode cache; non-batch dims must
+        match the pool's (same ``max_seq``)."""
+        return jax.tree.map(
+            lambda leaf, sl, ax: jax.lax.dynamic_update_slice_in_dim(
+                leaf, sl.astype(leaf.dtype), slot, axis=ax
+            ),
+            pool,
+            slot_cache,
+            self.cache_batch_axes(pool),
+        )
+
     def decode_step(self, params, cache, tokens):
         """tokens [B,1] → (logits [B,V], new cache). One new token."""
         cfg, rules = self.cfg, self.rules

@@ -1,1 +1,5 @@
 from repro.serve.engine import ServingEngine  # noqa: F401
+from repro.serve.kv_cache import SlotKVCache  # noqa: F401
+from repro.serve.load import make_requests  # noqa: F401
+from repro.serve.request import Request, ServeStats  # noqa: F401
+from repro.serve.scheduler import Scheduler  # noqa: F401

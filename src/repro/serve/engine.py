@@ -1,41 +1,33 @@
-"""Batched latency-critical serving driver.
+"""Continuous-batching serving engine (facade over the serving core).
 
 The paper's subject is latency-critical request processing; at LM scale
-that is the decode loop. The engine runs continuous batched decoding with
-per-request latency accounting (p50/p99), greedy or temperature sampling,
-and exposes ``serve_step`` — the function the multi-pod dry-run lowers
-for the decode_* / long_* shapes.
+that is the decode loop. PR 1 made the decode step *advisable* (one
+``Region`` whose work items are concurrent requests); this layer makes
+it *servable*: requests are admitted, decoded, and retired individually
+(DESIGN.md §3), with the decode step still routable through an accepted
+``RegionPlan``.
 
-Serving is also an *advisable workload*: ``decode_region`` exposes one
-decode step as an Aira ``Region`` whose work items are the concurrent
-requests (per-request KV-cache slices are disjoint by construction, so
-the dynamic-dependence stage clears), and ``set_decode_plan`` accepts
-the resulting ``RegionPlan`` so the decode step runs through the plan's
-compiled co-scheduled restructuring (DESIGN.md §1).
+  request.py    Request lifecycle (queued → prefill → decode → finished)
+                + per-request TTFT/TPOT/e2e accounting (``ServeStats``)
+  kv_cache.py   ``SlotKVCache`` — fixed pool of ``max_batch`` cache
+                slots; allocate on admit, free on finish/EOS
+  scheduler.py  ``Scheduler`` — per step: admit into free slots, one
+                batched decode over the full pool (masked plan execution
+                when a plan is set, so live-count changes never retrace)
+  engine.py     this facade: ``serve()`` is the open-loop entry,
+                ``generate()`` the fixed-batch compatibility wrapper,
+                ``decode_region()``/``set_decode_plan()`` the PR 1
+                advisory contract, unchanged.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-
-@dataclass
-class ServeStats:
-    step_ms: list = field(default_factory=list)
-
-    def percentile(self, p):
-        return float(np.percentile(np.asarray(self.step_ms), p)) if self.step_ms else 0.0
-
-    def summary(self) -> str:
-        return (
-            f"steps={len(self.step_ms)} p50={self.percentile(50):.2f}ms "
-            f"p99={self.percentile(99):.2f}ms"
-        )
+from repro.serve.request import Request, ServeStats  # noqa: F401 (re-export)
+from repro.serve.scheduler import Scheduler
 
 
 class ServingEngine:
@@ -47,15 +39,19 @@ class ServingEngine:
         max_seq: int,
         temperature: float = 0.0,
         decode_plan=None,
+        max_batch: Optional[int] = None,
     ):
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.temperature = temperature
+        self.max_batch = max_batch  # default slot-pool size for serve()
+        # engine-owned jitted steps, shared by every scheduler this engine
+        # makes: repeated generate()/serve() calls reuse the executables
         self._prefill = jax.jit(lambda p, t, **kw: model.prefill(p, t, max_seq, **kw))
         self._decode = jax.jit(model.decode_step)
+        self._plan_steps: dict = {}  # (plan key, pool size) → jitted plan step
         self._decode_plan = None
-        self._plan_step = None
         self.stats = ServeStats()
         if decode_plan is not None:
             self.set_decode_plan(decode_plan)
@@ -66,10 +62,7 @@ class ServingEngine:
     def _decode_cache_spec(self, cache):
         """(treedef, per-leaf batch-axis index) of the decode cache."""
         leaves, treedef = jax.tree.flatten(cache)
-        logical = jax.tree.flatten(
-            self.model.cache_axes(cache), is_leaf=lambda x: isinstance(x, tuple)
-        )[0]
-        axes = tuple(t.index("batch") if "batch" in t else 0 for t in logical)
+        axes = tuple(jax.tree.leaves(self.model.cache_batch_axes(cache)))
         assert len(axes) == len(leaves)
         return treedef, axes
 
@@ -101,6 +94,7 @@ class ServingEngine:
         prompts: jax.Array,
         *,
         name: str = "serve-decode",
+        seed: int = 0,
         task_flops: Optional[float] = None,
         task_bytes: Optional[float] = None,
         task_chain: int = 0,
@@ -111,16 +105,18 @@ class ServingEngine:
         Items are the batch of concurrent requests. The attached dynamic
         trace records each request touching only its own cache slice
         (disjoint by construction), so the dependence stages clear and
-        the overlap gate decides. Default napkin cost: weight-streaming
-        decode — 2·n_params FLOPs and n_params·4 bytes per request-token
-        (batched decode is bandwidth-bound, which is exactly why the
-        gate usually says no and latency-critical deployments ``force``).
+        the overlap gate decides. ``seed`` seeds the advisory trace's
+        first sampled token, so traces aren't silently correlated with
+        serving seeds. Default napkin cost: weight-streaming decode —
+        2·n_params FLOPs and n_params·4 bytes per request-token (batched
+        decode is bandwidth-bound, which is exactly why the gate usually
+        says no and latency-critical deployments ``force``).
         """
         from repro.core.adviser import Region
         from repro.core.deps import MemoryTrace
 
         logits, cache = self._prefill(self.params, prompts)
-        tok = self._sample(logits, jax.random.key(0))
+        tok = self._sample(logits, jax.random.key(seed))
         treedef, axes = self._decode_cache_spec(cache)
         items = self._decode_items(cache, tok, axes)
         n_params = sum(l.size for l in jax.tree.leaves(self.params))
@@ -142,57 +138,62 @@ class ServingEngine:
 
     def set_decode_plan(self, plan) -> None:
         """Route the decode step through an accepted ``RegionPlan`` (as
-        produced by advising ``decode_region`` — stack combine)."""
+        produced by advising ``decode_region`` — stack combine). Applies
+        to schedulers created from here on (masked execution over the
+        active-slot view)."""
         if plan is not None and plan.key.combine != "stack":
             raise ValueError("decode plan must preserve per-request order (combine='stack')")
         self._decode_plan = plan
-        self._plan_step = None  # rebuilt lazily against the cache spec
-
-    def _plan_decode(self, cache, tok):
-        if self._plan_step is None:
-            # the cache spec is invariant across steps: derive it once and
-            # fold the batch-axis shuffling into one jitted step so the
-            # per-token path stays a single dispatch
-            treedef, axes = self._decode_cache_spec(cache)
-            plan = self._decode_plan
-
-            def step(cache, tok):
-                leaves = jax.tree.leaves(cache)
-                items = (tok, [jnp.moveaxis(l, ax, 0) for l, ax in zip(leaves, axes)])
-                logits, new_leaves = plan.execute(items)
-                new_cache = jax.tree.unflatten(
-                    treedef,
-                    [jnp.moveaxis(l, 0, ax) for l, ax in zip(new_leaves, axes)],
-                )
-                return logits, new_cache
-
-            self._plan_step = jax.jit(step)
-        return self._plan_step(cache, tok)
 
     # ------------------------------------------------------------------
+    # serving entries
+    def scheduler(self, max_batch: int, *, seed: int = 0) -> Scheduler:
+        """A fresh continuous-batching scheduler over ``max_batch`` slots,
+        sharing this engine's stats and decode plan."""
+        return Scheduler(
+            self.model,
+            self.params,
+            max_batch=max_batch,
+            max_seq=self.max_seq,
+            temperature=self.temperature,
+            decode_plan=self._decode_plan,
+            stats=self.stats,
+            seed=seed,
+            prefill_fn=self._prefill,
+            decode_fn=self._decode,
+            plan_step_cache=self._plan_steps,
+        )
+
+    def serve(self, requests, *, max_batch: Optional[int] = None, seed: int = 0) -> dict:
+        """Continuous-batching entry: drive ``requests`` (each with its
+        own arrival time, prompt length, and token budget) to completion
+        through a slot pool. Returns rid → generated tokens."""
+        requests = list(requests)
+        mb = max_batch or self.max_batch or max(1, min(8, len(requests)))
+        return self.scheduler(mb, seed=seed).run(requests)
+
     def _sample(self, logits, key):
         if self.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1)
         return jax.random.categorical(key, logits / self.temperature, axis=-1)
 
     def generate(self, prompts: jax.Array, n_steps: int, *, seed: int = 0, patch_embeds=None):
-        """prompts [B, S0] → generated tokens [B, n_steps]."""
-        kw = {}
-        if patch_embeds is not None:
-            kw["patch_embeds"] = patch_embeds
-        logits, cache = self._prefill(self.params, prompts, **kw)
-        key = jax.random.key(seed)
-        out = []
-        tok = self._sample(logits, key)
-        for i in range(n_steps):
-            out.append(tok)
-            t0 = time.perf_counter()
-            if self._decode_plan is not None:
-                logits, cache = self._plan_decode(cache, tok)
-            else:
-                logits, cache = self._decode(self.params, cache, tok[:, None])
-            logits.block_until_ready()
-            self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits, sub)
-        return jnp.stack(out, axis=1)
+        """prompts [B, S0] → generated tokens [B, n_steps].
+
+        Fixed-batch compatibility wrapper: B requests all arriving at
+        t=0 into a B-slot pool — one full continuous batch. Stats start
+        clean every call."""
+        B = int(prompts.shape[0])
+        if n_steps <= 0:
+            self.stats.reset()
+            return jnp.zeros((B, 0), jnp.int32)
+        reqs = [
+            Request(
+                prompt=prompts[i],
+                max_new_tokens=n_steps,
+                patch_embeds=None if patch_embeds is None else patch_embeds[i],
+            )
+            for i in range(B)
+        ]
+        out = self.scheduler(B, seed=seed).run(reqs)
+        return jnp.stack([jnp.asarray(out[r.rid]) for r in reqs], axis=0)

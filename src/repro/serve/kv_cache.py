@@ -1,0 +1,94 @@
+"""Slotted KV-cache pool for continuous batching.
+
+Owns a fixed pool of ``max_batch`` decode-cache slots (one
+``Model.init_cache(max_batch, max_seq)`` allocation, made once). Slots
+are allocated when a request is admitted and freed when it finishes or
+hits EOS; the decode step always runs over the *whole* pool, so its jit
+shape never changes — liveness is the ``live_mask`` the masked plan
+execution consumes (DESIGN.md §3).
+
+All per-family slot logic rides on ``Model.cache_batch_axes`` /
+``read_cache_slot`` / ``write_cache_slot`` (the batch-axis metadata next
+to ``cache_axes``), so this module never inspects cache leaves itself.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Optional
+
+
+class SlotKVCache:
+    """Fixed pool of cache slots: allocate on admit, free on finish."""
+
+    def __init__(self, model, max_batch: int, max_seq: int, dtype=None):
+        self.model = model
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq)
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.cache = model.init_cache(self.max_batch, self.max_seq, dtype=dtype)
+        self._free: list[int] = list(range(self.max_batch))  # ascending
+        self._owner: list[Optional[int]] = [None] * self.max_batch  # slot → rid
+
+    # ------------------------------------------------------------------
+    # occupancy
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return self.max_batch - len(self._free)
+
+    def owner(self, slot: int) -> Optional[int]:
+        return self._owner[slot]
+
+    def live_mask(self):
+        """[max_batch] bool — which slots hold live requests."""
+        import numpy as np
+
+        return np.array([o is not None for o in self._owner])
+
+    def live_slots(self) -> list[int]:
+        return [i for i, o in enumerate(self._owner) if o is not None]
+
+    # ------------------------------------------------------------------
+    # slot lifecycle
+    def alloc(self, rid: int) -> int:
+        """Claim the lowest free slot for request ``rid``."""
+        if not self._free:
+            raise RuntimeError("no free cache slot (pool exhausted)")
+        slot = self._free.pop(0)
+        self._owner[slot] = rid
+        return slot
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.max_batch:
+            raise IndexError(f"slot {slot} out of range")
+        if self._owner[slot] is None:
+            raise RuntimeError(f"double free of slot {slot}")
+        self._owner[slot] = None
+        bisect.insort(self._free, slot)
+
+    # ------------------------------------------------------------------
+    # cache I/O (family-agnostic, via the model's batch-axis metadata)
+    def write(self, slot: int, slot_cache) -> None:
+        """Install a batch=1 cache (a request's prefill) into ``slot``."""
+        if self._owner[slot] is None:
+            raise RuntimeError(f"write into free slot {slot}")
+        self.cache = self.model.write_cache_slot(self.cache, slot_cache, slot)
+
+    def read(self, slot: int):
+        """Slot ``slot`` as a batch=1 cache."""
+        return self.model.read_cache_slot(self.cache, slot)
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Free slots and live slots partition the pool; the free list is
+        sorted and duplicate-free (used by the property tests)."""
+        live = {i for i, o in enumerate(self._owner) if o is not None}
+        free = set(self._free)
+        assert len(self._free) == len(free), "duplicate in free list"
+        assert not (free & live), "slot both free and live"
+        assert free | live == set(range(self.max_batch)), "slot leaked"
+        assert self._free == sorted(self._free), "free list unsorted"

@@ -1,0 +1,42 @@
+"""Open-loop load generation for the serving core.
+
+Poisson arrivals (exponential inter-arrival gaps) with randomized prompt
+lengths and token budgets — arrivals follow their own schedule
+regardless of completions, the honest way to load a latency-critical
+server (DESIGN.md §3). Shared by ``benchmarks/serving_load.py`` and
+``examples/serve_decode.py`` so the tracked benchmark and the demo never
+diverge.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_requests(
+    n: int,
+    rate_rps: float,
+    *,
+    vocab: int,
+    max_new_tokens: int,
+    prompt_lens=(4, 8, 12, 16),
+    rng: np.random.Generator,
+):
+    """n Poisson-arrival requests at ``rate_rps``, each with a random
+    prompt length from ``prompt_lens`` and a random budget in
+    [min(2, max_new_tokens), max_new_tokens]."""
+    from repro.serve.request import Request
+
+    lo = min(2, max_new_tokens)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    reqs = []
+    for i in range(n):
+        s0 = int(rng.choice(prompt_lens))
+        prompt = rng.integers(0, vocab, size=(s0,)).astype(np.int32)
+        reqs.append(
+            Request(
+                prompt=prompt,
+                max_new_tokens=int(rng.integers(lo, max_new_tokens + 1)),
+                arrival_time=float(arrivals[i]),
+            )
+        )
+    return reqs

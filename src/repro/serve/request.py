@@ -1,0 +1,137 @@
+"""Request lifecycle for the continuous-batching serving core.
+
+A ``Request`` is the schedulable unit the paper's task-queue analogy
+maps onto at serving scale: where Relic splits a hotspot into microtasks
+cheap enough to co-schedule, the serving layer splits traffic into
+requests cheap enough to admit and retire individually (DESIGN.md §3).
+States move queued → prefill → decode → finished; the scheduler owns
+every transition. Latency accounting is per-request — TTFT (arrival to
+first token, including queueing), TPOT (decode time per subsequent
+token), and end-to-end — aggregated across a run by ``ServeStats``.
+
+All times are seconds on the scheduler's run clock (0 = run start), so
+``arrival_time`` doubles as the open-loop load generator's injection
+schedule.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+QUEUED = "queued"
+PREFILL = "prefill"
+DECODE = "decode"
+FINISHED = "finished"
+
+_RID = itertools.count()
+
+
+@dataclass
+class Request:
+    """One generation request: a prompt, a token budget, an arrival time."""
+
+    prompt: Any  # [S0] int token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0  # seconds from run start (open-loop schedule)
+    eos_id: Optional[int] = None  # early finish on this token
+    patch_embeds: Any = None  # [P, D] VLM frontend embeddings
+    rid: int = field(default_factory=lambda: next(_RID))
+
+    # lifecycle — owned by the scheduler
+    state: str = QUEUED
+    slot: Optional[int] = None
+    tokens: list = field(default_factory=list)
+    t_admit: Optional[float] = None  # prefill started (slot allocated)
+    t_first: Optional[float] = None  # first token available
+    t_finish: Optional[float] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.state == FINISHED
+
+    def output(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+    # ------------------------------------------------------------------
+    # latency accounting
+    @property
+    def ttft_ms(self) -> Optional[float]:
+        """Arrival → first token, queueing included."""
+        if self.t_first is None:
+            return None
+        return (self.t_first - self.arrival_time) * 1e3
+
+    @property
+    def e2e_ms(self) -> Optional[float]:
+        if self.t_finish is None:
+            return None
+        return (self.t_finish - self.arrival_time) * 1e3
+
+    @property
+    def tpot_ms(self) -> Optional[float]:
+        """Decode time per token after the first (None with <2 tokens)."""
+        if self.t_finish is None or len(self.tokens) < 2:
+            return None
+        return (self.t_finish - self.t_first) / (len(self.tokens) - 1) * 1e3
+
+
+@dataclass
+class ServeStats:
+    """Per-run latency aggregates: decode-step wall-clock plus the
+    per-request TTFT/TPOT/e2e series recorded as requests retire."""
+
+    step_ms: list = field(default_factory=list)
+    ttft_ms: list = field(default_factory=list)
+    tpot_ms: list = field(default_factory=list)
+    e2e_ms: list = field(default_factory=list)
+
+    def reset(self) -> None:
+        """Start a run from clean series — percentiles never mix runs."""
+        self.step_ms.clear()
+        self.ttft_ms.clear()
+        self.tpot_ms.clear()
+        self.e2e_ms.clear()
+
+    def record(self, req: Request) -> None:
+        """Fold a finished request's latencies into the run series."""
+        if req.ttft_ms is not None:
+            self.ttft_ms.append(req.ttft_ms)
+        if req.tpot_ms is not None:
+            self.tpot_ms.append(req.tpot_ms)
+        if req.e2e_ms is not None:
+            self.e2e_ms.append(req.e2e_ms)
+
+    def percentile(self, p, series: str = "step_ms") -> float:
+        vals = getattr(self, series)
+        return float(np.percentile(np.asarray(vals), p)) if vals else 0.0
+
+    def summary(self) -> str:
+        s = (
+            f"steps={len(self.step_ms)} p50={self.percentile(50):.2f}ms "
+            f"p99={self.percentile(99):.2f}ms"
+        )
+        if self.ttft_ms:
+            s += (
+                f" | requests={len(self.ttft_ms)}"
+                f" ttft_p50={self.percentile(50, 'ttft_ms'):.2f}ms"
+                f" ttft_p99={self.percentile(99, 'ttft_ms'):.2f}ms"
+            )
+        return s
+
+    def serving_summary(self) -> dict:
+        """Machine-readable serving latencies (BENCH_aira.json section)."""
+        return {
+            "n_requests": len(self.ttft_ms),
+            "n_steps": len(self.step_ms),
+            "p50_ttft_ms": self.percentile(50, "ttft_ms"),
+            "p99_ttft_ms": self.percentile(99, "ttft_ms"),
+            "p50_tpot_ms": self.percentile(50, "tpot_ms"),
+            "p99_tpot_ms": self.percentile(99, "tpot_ms"),
+            "p50_step_ms": self.percentile(50),
+            "p99_step_ms": self.percentile(99),
+            "p50_e2e_ms": self.percentile(50, "e2e_ms"),
+            "p99_e2e_ms": self.percentile(99, "e2e_ms"),
+        }

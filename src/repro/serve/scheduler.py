@@ -1,0 +1,248 @@
+"""Plan-aware continuous-batching scheduler.
+
+Each ``step()`` (the serving analogue of one Relic task-queue tick):
+
+  1. admits arrived queued requests into free slots — per-request
+     prefill, written into the slot pool, first token sampled from the
+     prefill logits (that instant is the request's TTFT);
+  2. runs ONE batched decode over the full fixed-shape slot pool —
+     through the engine's accepted ``RegionPlan`` via masked execution
+     when one is set — so neither jit nor the plan retraces as the
+     number of live requests changes (the live mask is data, not shape);
+  3. samples the next token per live slot, retires requests that hit
+     their token budget or EOS, and frees their slots.
+
+Dead slots still flow through the decode (static shapes); their outputs
+are ignored (plain path) or zeroed (masked plan path). Greedy decoding
+is batch-size independent per row, so a half-full continuous batch
+reproduces the fixed-batch baseline token-for-token — the property the
+serving tests pin.
+
+Driving is open-loop: ``run()`` injects requests at their
+``arrival_time`` regardless of completions, which is the honest way to
+load a latency-critical server (closed-loop drivers hide queueing).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.kv_cache import SlotKVCache
+from repro.serve.request import DECODE, FINISHED, PREFILL, Request, ServeStats
+
+
+class Scheduler:
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        max_batch: int,
+        max_seq: int,
+        temperature: float = 0.0,
+        decode_plan=None,
+        stats: Optional[ServeStats] = None,
+        seed: int = 0,
+        prefill_fn=None,
+        decode_fn=None,
+        plan_step_cache: Optional[dict] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.temperature = float(temperature)
+        self.seed = seed
+        self.kv = SlotKVCache(model, max_batch, max_seq)
+        self.stats = stats if stats is not None else ServeStats()
+        self._queue: list[Request] = []  # sorted by (arrival_time, rid)
+        self._active: dict[int, Request] = {}  # slot → request
+        self._n_admitted = 0  # per-run sampling-key ordinal (not the global rid)
+        self._tok = jnp.zeros((max_batch,), jnp.int32)  # last token per slot
+        self._keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(max_batch, dtype=jnp.uint32))
+        # jitted steps are engine-owned when schedulers are engine-made, so
+        # repeated generate()/serve() calls reuse compiled executables
+        self._prefill = prefill_fn or jax.jit(
+            lambda p, t, **kw: model.prefill(p, t, max_seq, **kw)
+        )
+        self._decode = decode_fn or jax.jit(model.decode_step)
+        self._plan_steps = plan_step_cache if plan_step_cache is not None else {}
+        self._decode_plan = None
+        self._t0: Optional[float] = None
+        if decode_plan is not None:
+            self.set_decode_plan(decode_plan)
+
+    # ------------------------------------------------------------------
+    # plan routing (PR 1 contract, now over the active-slot view)
+    def set_decode_plan(self, plan) -> None:
+        """Route the pool decode through an accepted ``RegionPlan`` (as
+        produced by advising ``decode_region`` — stack combine only,
+        since request order is externally visible)."""
+        if plan is not None and plan.key.combine != "stack":
+            raise ValueError(
+                "decode plan must preserve per-request order (combine='stack')"
+            )
+        self._decode_plan = plan
+
+    def _plan_decode(self, cache, tok, mask):
+        cache_key = (self._decode_plan.key, self.kv.max_batch)
+        if cache_key not in self._plan_steps:
+            # pool spec is invariant across steps: fold the batch-axis
+            # shuffling into one jitted step; the plan's masked executor
+            # keeps a single trace across live-count changes, and the
+            # step itself is cached per (plan, pool size) — engine-wide
+            # when the scheduler is engine-made
+            leaves, treedef = jax.tree.flatten(cache)
+            axes = tuple(jax.tree.leaves(self.model.cache_batch_axes(cache)))
+            assert len(axes) == len(leaves)
+            plan = self._decode_plan
+
+            def step(cache, tok, mask):
+                leaves = jax.tree.leaves(cache)
+                items = (tok, [jnp.moveaxis(l, ax, 0) for l, ax in zip(leaves, axes)])
+                logits, new_leaves = plan.execute_masked(items, mask)
+                new_cache = jax.tree.unflatten(
+                    treedef,
+                    [jnp.moveaxis(l, 0, ax) for l, ax in zip(new_leaves, axes)],
+                )
+                return logits, new_cache
+
+            self._plan_steps[cache_key] = jax.jit(step)
+        return self._plan_steps[cache_key](cache, tok, mask)
+
+    # ------------------------------------------------------------------
+    # clock: seconds since run start (arrival_time's frame)
+    def _clock(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    # ------------------------------------------------------------------
+    # lifecycle transitions
+    def submit(self, req: Request) -> None:
+        need = int(jnp.asarray(req.prompt).shape[0]) + req.max_new_tokens
+        if req.patch_embeds is not None:
+            need += int(jnp.asarray(req.patch_embeds).shape[0])
+        if need > self.max_seq:
+            # past max_seq the cache write clamps and silently corrupts
+            # the newest KV entry — fail loudly at submission instead
+            raise ValueError(
+                f"request {req.rid}: prompt + max_new_tokens = {need} "
+                f"exceeds the slot capacity max_seq={self.max_seq}"
+            )
+        req.state = "queued"
+        self._queue.append(req)
+        self._queue.sort(key=lambda r: (r.arrival_time, r.rid))
+
+    def _sample_row(self, logits_row, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits_row, axis=-1)
+        return jax.random.categorical(key, logits_row / self.temperature, axis=-1)
+
+    def _admit(self, reqs: list, now: float) -> None:
+        """Admit a wave of arrived requests: same-shape prompts prefill as
+        ONE batched call (the fixed-batch ``generate()`` wave is a single
+        batch-B prefill, as before the scheduler existed), each row then
+        written into its own slot via ``read_cache_slot``."""
+        ordinals = {}
+        for req in reqs:
+            # key by the per-run admission ordinal, not the process-global
+            # rid: the same seed reproduces the same tokens across runs
+            ordinals[req.rid] = self._n_admitted
+            self._n_admitted += 1
+            req.state, req.t_admit = PREFILL, now
+        groups: dict = {}
+        for req in reqs:
+            pe = None if req.patch_embeds is None else tuple(jnp.asarray(req.patch_embeds).shape)
+            groups.setdefault((int(jnp.asarray(req.prompt).shape[0]), pe), []).append(req)
+        for (_, pe), group in groups.items():
+            kw = {}
+            if pe is not None:
+                kw["patch_embeds"] = jnp.stack([jnp.asarray(r.patch_embeds) for r in group])
+            prompts = jnp.stack([jnp.asarray(r.prompt) for r in group])
+            logits, cache = self._prefill(self.params, prompts, **kw)
+            for i, req in enumerate(group):
+                slot = self.kv.alloc(req.rid)
+                req.slot = slot
+                self.kv.write(slot, self.model.read_cache_slot(cache, i))
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(self.seed), ordinals[req.rid]
+                )
+                key, sub = jax.random.split(key)
+                tok0 = int(self._sample_row(logits[i], sub))
+                req.t_first = self._clock()  # first token exists from here
+                req.tokens.append(tok0)
+                req.state = DECODE
+                self._tok = self._tok.at[slot].set(tok0)
+                self._keys = self._keys.at[slot].set(key)
+                self._active[slot] = req
+                if len(req.tokens) >= req.max_new_tokens or tok0 == req.eos_id:
+                    self._retire(req, self._clock())
+
+    def _retire(self, req: Request, now: float) -> None:
+        req.state, req.t_finish = FINISHED, now
+        self.stats.record(req)
+        self.kv.free(req.slot)
+        del self._active[req.slot]
+
+    # ------------------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> bool:
+        """Admit arrived requests, then run one batched decode over the
+        live set. Returns False when there was nothing to do."""
+        if now is None:
+            now = self._clock()
+        wave = []
+        while self._queue and self._queue[0].arrival_time <= now and len(wave) < self.kv.n_free:
+            wave.append(self._queue.pop(0))
+        if wave:
+            self._admit(wave, now)
+        if not self._active:
+            return bool(wave)
+
+        mask = self.kv.live_mask()
+        t0 = time.perf_counter()
+        if self._decode_plan is not None:
+            logits, new_cache = self._plan_decode(
+                self.kv.cache, self._tok, jnp.asarray(mask)
+            )
+        else:
+            logits, new_cache = self._decode(
+                self.params, self.kv.cache, self._tok[:, None]
+            )
+        logits.block_until_ready()
+        self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
+        self.kv.cache = new_cache
+
+        keys, subs = jax.vmap(jax.random.split, out_axes=1)(self._keys)
+        nxt = jax.vmap(self._sample_row)(logits, subs)
+        live = jnp.asarray(mask)
+        self._tok = jnp.where(live, nxt, self._tok)
+        self._keys = jnp.where(live[:, None], keys, self._keys)
+        nxt_host = np.asarray(nxt)
+        for slot, req in list(self._active.items()):
+            tok = int(nxt_host[slot])
+            req.tokens.append(tok)
+            if len(req.tokens) >= req.max_new_tokens or tok == req.eos_id:
+                self._retire(req, self._clock())
+        return True
+
+    def run(self, requests=None, *, reset_stats: bool = True) -> dict:
+        """Open-loop drive to completion: submit ``requests``, admit each
+        at its ``arrival_time``, decode until everything finishes.
+        Returns rid → generated tokens (np.int32)."""
+        if reset_stats:
+            self.stats.reset()
+        self._t0 = time.perf_counter()
+        requests = list(requests or [])
+        for r in requests:
+            self.submit(r)
+        while self._queue or self._active:
+            if not self._active and self._queue:
+                wait = self._queue[0].arrival_time - self._clock()
+                if wait > 0:
+                    time.sleep(wait)
+            self.step()
+        return {r.rid: r.output() for r in requests}
