@@ -6,7 +6,9 @@
   µbench       CPU wall-clock of each benchmark's serial JAX kernel
                (``name,us_per_call,derived`` CSV)
   §Serving     open-loop Poisson-arrival load on the continuous-batching
-               serving core (p50/p99 TTFT, per-token latency)
+               serving core (p50/p99 TTFT, per-token latency), plus the
+               shared-prefix reuse-on/off TTFT comparison on the paged
+               KV cache
 
 Every run writes ``BENCH_aira.json`` — per-benchmark predicted/realized
 gain plus the µbench wall-clock — so the perf trajectory is machine-
@@ -48,7 +50,8 @@ def write_summary(rows, gm_pos, gm_all, ubench_us, serving=None, path="BENCH_air
     """Machine-readable per-PR perf summary (predicted gains are the
     calibrated overlap model; µbench is measured CPU wall-clock;
     ``serving`` is the open-loop load test's p50/p99 TTFT + per-token
-    latency from benchmarks/serving_load.py)."""
+    latency from benchmarks/serving_load.py, including the
+    ``shared_prefix`` reuse-on/off comparison on the paged engine)."""
     summary = {
         "benchmarks": [
             {
@@ -86,6 +89,10 @@ def main() -> None:
     serving = serving_load.run(
         n_requests=6 if fast else 12, tokens=4 if fast else 8
     )
+    print()
+    # not reduced under --fast: the reuse-on/off TTFT comparison needs
+    # enough requests for stable percentiles, and runs in seconds anyway
+    serving["shared_prefix"] = serving_load.run_shared_prefix()
     write_summary(rows, gm_pos, gm_all, ubench_us, serving=serving)
 
 

@@ -10,13 +10,14 @@ Two modes:
   continuous-batching path — and per-request TTFT percentiles are
   reported.
 
-Either mode optionally runs with the int8 KV cache, and optionally
-advised by Aira (``--aira`` exposes the decode step as a Region, advises
-it, and routes decoding through the accepted RegionPlan — masked over
-the active slots in open-loop mode).
+Either mode optionally runs with the int8 KV cache, with the block-
+paged KV cache + prefix reuse (``--paged``, attention families), and
+optionally advised by Aira (``--aira`` exposes the decode step as a
+Region, advises it, and routes decoding through the accepted RegionPlan
+— masked over the active slots in open-loop mode; slotted layout only).
 
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
-      [--int8-kv] [--tokens 32] [--batch 4] [--aira]
+      [--int8-kv] [--paged] [--tokens 32] [--batch 4] [--aira]
       [--open-loop 8] [--rate 20]
 """
 import argparse
@@ -37,6 +38,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4,
                     help="fixed batch size / open-loop slot-pool size")
     ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache with shared-prefix reuse")
     ap.add_argument("--aira", action="store_true",
                     help="advise the decode step and serve through its RegionPlan")
     ap.add_argument("--open-loop", type=int, default=0, metavar="N",
@@ -50,7 +53,10 @@ def main():
         cfg = dataclasses.replace(cfg, kv_quant=True)
     model = Model(cfg)
     params, _ = model.init(jax.random.key(0))
-    engine = ServingEngine(model, params, max_seq=256)
+    engine = ServingEngine(
+        model, params, max_seq=256,
+        kv_layout="paged" if args.paged else "slot",
+    )
 
     prompts = jax.random.randint(jax.random.key(1), (args.batch, 16), 0, cfg.vocab_size)
 
@@ -65,7 +71,9 @@ def main():
             engine.set_decode_plan(d.plan)
             print("decode routed through RegionPlan:", d.plan.describe())
 
-    print(f"arch={args.arch} int8_kv={args.int8_kv} aira={args.aira}")
+    print(
+        f"arch={args.arch} int8_kv={args.int8_kv} paged={args.paged} aira={args.aira}"
+    )
     if args.open_loop > 0:
         from repro.serve.load import make_requests
 

@@ -187,6 +187,32 @@ def scatter_token_flat(cache, new, cache_len):
     )(cache, new, cache_len)
 
 
+def gather_block_rows(pool_leaf, block_tables):
+    """Dense per-row cache view of a block-paged pool leaf.
+
+    ``pool_leaf`` [L, NB, BS, ...] (NB physical blocks of BS tokens);
+    ``block_tables`` [B, MB] int block ids per decode row. Returns
+    [L, B, MB·BS, ...] — each row's logical KV sequence gathered through
+    its block table. Fixed shape regardless of how many blocks a row
+    actually owns (unowned table entries point at the null block and are
+    masked off by ``cache_len`` in ``decode_attention``)."""
+    mb = block_tables.shape[1]
+    t = jnp.take(pool_leaf, block_tables, axis=1)  # [L, B, MB, BS, ...]
+    return t.reshape(t.shape[:2] + (mb * pool_leaf.shape[2],) + t.shape[4:])
+
+
+def scatter_block_token(pool_leaf, token_rows, block_ids, offsets):
+    """Append one token per decode row into its *tail block* in place.
+
+    ``pool_leaf`` [L, NB, BS, ...]; ``token_rows`` [L, B, ...] (the new
+    token's KV rows); ``block_ids``/``offsets`` [B] — per-row physical
+    block and in-block position of the write. Rows map to distinct live
+    blocks (shared prefix blocks are immutable and never a write
+    target), so the scatter is conflict-free; dead rows target the null
+    block."""
+    return pool_leaf.at[:, block_ids, offsets].set(token_rows)
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, rules=None):
     """One-token attention over a (possibly seq-sharded) KV cache.
 
@@ -241,11 +267,17 @@ def attention_block(
     positions=None,
     cache=None,
     cache_len=None,
+    prefix_kv=None,
 ):
     """Pre-norm'd GQA attention. Returns (out, new_cache_kv).
 
     Train/prefill: cache is None → causal self-attention, cache returned
     when ``cfg`` asks (prefill writes the cache it produced).
+    Suffix prefill: ``prefix_kv`` = (k, v) [B,h,KV,hd] of an already-
+    computed (prefix-cache hit) prompt prefix; x is the suffix only and
+    attends over prefix + suffix with ``q_offset=h``. Per-query flash
+    accumulation is independent of which query rows run, so suffix rows
+    come out bitwise-identical to a cold full-prompt prefill.
     Decode: x is [B,1,D]; cache = (k,v) [B,Smax,KV,hd]; cache_len [B].
     """
     B, S, D = x.shape
@@ -268,7 +300,21 @@ def attention_block(
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
 
-    if cache is None:
+    if cache is None and prefix_kv is not None:
+        pk, pv = prefix_kv
+        k_full = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        out = gqa_attention(
+            q,
+            k_full,
+            v_full,
+            q_offset=pk.shape[1],
+            chunk=cfg.attn_chunk,
+            blocking=cfg.causal_blocking,
+            rules=rules,
+        )
+        new_kv = (k_full, v_full)  # full prefix+suffix KV, cache-fillable
+    elif cache is None:
         out = gqa_attention(
             q, k, v, chunk=cfg.attn_chunk, blocking=cfg.causal_blocking, rules=rules
         )

@@ -28,6 +28,14 @@ from repro.parallel.sharding import ShardingRules
 
 ATTN_FAMILIES = ("dense", "moe", "audio", "vlm")
 
+# Families whose suffix prefill (prefill_with_prefix) is bitwise-identical
+# to a cold prefill, so KV prefix reuse cannot change tokens. MoE is out
+# (dispatch capacity depends on tokens-per-call, so suffix routing can
+# drop different tokens), VLM is out (patch embeddings occupy cache rows
+# that are not token-addressable). int8-KV is excluded separately (prefix
+# rows would be requantized on refill).
+PREFIX_FAMILIES = ("dense", "audio")
+
 # baseline switch (launch.dryrun --legacy): pre-optimization decode scan
 # slices the cache per layer via xs/ys, which writes a full layer-cache
 # slice back per step (EXPERIMENTS.md §Perf #decode-cache)
@@ -131,7 +139,9 @@ class Model:
 
     # ------------------------------------------------------------------
     # shared layer bodies
-    def _dense_layer(self, x, lp, path, positions=None, cache=None, cache_len=None):
+    def _dense_layer(
+        self, x, lp, path, positions=None, cache=None, cache_len=None, prefix_kv=None
+    ):
         cfg, rules = self.cfg, self.rules
         h, new_kv = attn.attention_block(
             lp["attn"],
@@ -141,6 +151,7 @@ class Model:
             positions=positions,
             cache=cache,
             cache_len=cache_len,
+            prefix_kv=prefix_kv,
         )
         x = x + h
         hin = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
@@ -367,6 +378,55 @@ class Model:
             self.cache_batch_axes(pool),
         )
 
+    # ------------------------------------------------------------------
+    # block-paged decode cache (serve/kv_cache.PagedKVCache)
+    def init_paged_cache(self, num_blocks, block_size, dtype=None):
+        """Physical block pool: ``num_blocks`` blocks of ``block_size``
+        tokens each, laid out exactly like a decode cache with
+        batch=num_blocks and max_seq=block_size. Attention families only
+        — SSM state has no sequence axis to page. Per-row lengths live
+        with the block tables (PagedKVCache), not in the pool."""
+        if self.cfg.family not in ATTN_FAMILIES:
+            raise ValueError(
+                f"paged KV cache needs an attention family, got {self.cfg.family!r}"
+            )
+        pool = self.init_cache(num_blocks, block_size, dtype=dtype)
+        pool.pop("len")
+        return pool
+
+    def paged_view(self, pool, block_tables):
+        """Dense [L, B, MB·BS, ...] per-row caches gathered from the block
+        pool through ``block_tables`` [B, MB] — the fixed-shape read side
+        of paged decode."""
+        return {
+            name: attn.gather_block_rows(leaf, block_tables)
+            for name, leaf in pool.items()
+        }
+
+    def decode_step_paged(self, params, pool, block_tables, cache_len, tokens):
+        """One decode token over a block-paged KV cache.
+
+        Reads gather each row's K/V through its block table into the
+        fixed-shape dense view and run the ordinary ``decode_step``
+        (identical numerics); the one token that step appends is then
+        scattered back into each row's tail block. Shared prefix blocks
+        are never a write target (the scheduler only shares immutable
+        full-prompt blocks), so the scatter touches exclusively-owned
+        blocks only. ``block_tables`` and ``cache_len`` are data, not
+        shape: one jit trace serves any block layout and live set."""
+        bs = pool["k"].shape[2]
+        dense = self.paged_view(pool, block_tables)
+        logits, new_dense = self.decode_step(params, dict(dense, len=cache_len), tokens)
+        bid = jnp.take_along_axis(block_tables, (cache_len // bs)[:, None], axis=1)[:, 0]
+        off = cache_len % bs
+        new_pool = {}
+        for name, leaf in pool.items():
+            nd = new_dense[name]  # [L, B, MB·BS, ...]
+            idx = cache_len.reshape((1, -1, 1) + (1,) * (nd.ndim - 3))
+            token_rows = jnp.take_along_axis(nd, idx, axis=2)[:, :, 0]
+            new_pool[name] = attn.scatter_block_token(leaf, token_rows, bid, off)
+        return logits, new_pool
+
     def decode_step(self, params, cache, tokens):
         """tokens [B,1] → (logits [B,V], new cache). One new token."""
         cfg, rules = self.cfg, self.rules
@@ -578,4 +638,53 @@ class Model:
                 lambda s: s.reshape((cfg.num_layers,) + s.shape[2:]), sts
             )
         cache["len"] = jnp.full_like(cache["len"], S)
+        return logits, cache
+
+    def prefill_with_prefix(self, params, tokens, prefix_k, prefix_v, max_seq):
+        """Suffix prefill over an already-cached prompt prefix.
+
+        ``tokens`` [B, Ssuf] are the prompt tokens *after* the cached
+        prefix; ``prefix_k``/``prefix_v`` [L, B, h, KV, hd] are the
+        prefix's post-RoPE KV rows (as gathered from the paged pool).
+        Returns (next-token logits [B, V], dense cache holding the full
+        prefix+suffix KV, len = h + Ssuf). Because per-query flash
+        accumulation never depends on which other query rows run, the
+        suffix comes out bitwise-identical to a cold full-prompt
+        ``prefill`` for dense/audio families — at the cost of the suffix
+        only, which is where the shared-prefix TTFT win comes from.
+        (MoE is excluded from prefix *reuse* upstream: dispatch capacity
+        depends on tokens-per-call, so suffix routing can drop different
+        tokens than the cold run.)"""
+        cfg, rules = self.cfg, self.rules
+        if cfg.family not in PREFIX_FAMILIES:
+            raise ValueError(
+                f"prefix prefill is only token-identical for {PREFIX_FAMILIES}, "
+                f"got {cfg.family!r} (MoE capacity routing / VLM patch rows diverge)"
+            )
+        if cfg.kv_quant:
+            raise ValueError("prefix prefill does not support the int8 KV cache")
+        h = prefix_k.shape[2]
+        B, Ssuf = tokens.shape
+        x = embed_tokens(params["embed"], tokens, rules)
+        x = constrain(rules, x, ("batch", "seq", None))
+        positions = (h + jnp.arange(Ssuf))[None, :].astype(jnp.int32)
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, pk, pv = xs
+            x, a, _kv = self._dense_layer(
+                x, lp, "dispatch", positions=positions, prefix_kv=(pk, pv)
+            )
+            return (x, aux + a), _kv
+
+        (x, _), (k, v) = jax.lax.scan(
+            self._maybe_remat(body), (x, 0.0), (params["layers"], prefix_k, prefix_v)
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+        cache = self.init_cache(B, max_seq)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
+        cache["len"] = jnp.full_like(cache["len"], h + Ssuf)
         return logits, cache

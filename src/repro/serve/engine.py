@@ -8,16 +8,27 @@ it *servable*: requests are admitted, decoded, and retired individually
 ``RegionPlan``.
 
   request.py    Request lifecycle (queued → prefill → decode → finished)
-                + per-request TTFT/TPOT/e2e accounting (``ServeStats``)
+                + per-request TTFT/TPOT/e2e + prefix-hit accounting
+                (``ServeStats``)
+  block.py      ``BlockAllocator`` (refcounted block pool, LRU eviction)
+                + ``PrefixCache`` (trie of immutable prompt blocks)
   kv_cache.py   ``SlotKVCache`` — fixed pool of ``max_batch`` cache
-                slots; allocate on admit, free on finish/EOS
-  scheduler.py  ``Scheduler`` — per step: admit into free slots, one
-                batched decode over the full pool (masked plan execution
-                when a plan is set, so live-count changes never retrace)
+                slots; allocate on admit, free on finish/EOS.
+                ``PagedKVCache`` — block-granular cache memory with
+                shared-prefix reuse (``kv_layout="paged"``)
+  scheduler.py  ``Scheduler`` — per step: admit into free rows (charged
+                in slots or blocks; prefix hits prefill the suffix
+                only), one batched decode over the full pool (masked
+                plan execution when a plan is set; block-table
+                gather/scatter when paged — live-count, table, and
+                length changes never retrace)
   engine.py     this facade: ``serve()`` is the open-loop entry,
                 ``generate()`` the fixed-batch compatibility wrapper,
                 ``decode_region()``/``set_decode_plan()`` the PR 1
-                advisory contract, unchanged.
+                advisory contract, unchanged. ``kv_layout="paged"``
+                (constructor default or per-call) selects the paged
+                path; the slotted path stays as the differential
+                baseline.
 """
 from __future__ import annotations
 
@@ -40,21 +51,41 @@ class ServingEngine:
         temperature: float = 0.0,
         decode_plan=None,
         max_batch: Optional[int] = None,
+        kv_layout: str = "slot",
+        block_size: int = 8,
+        num_blocks: Optional[int] = None,
+        prefix_cache: bool = True,
     ):
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.temperature = temperature
         self.max_batch = max_batch  # default slot-pool size for serve()
+        self.kv_layout = kv_layout  # default layout for serve()/scheduler()
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.prefix_cache = prefix_cache
         # engine-owned jitted steps, shared by every scheduler this engine
         # makes: repeated generate()/serve() calls reuse the executables
         self._prefill = jax.jit(lambda p, t, **kw: model.prefill(p, t, max_seq, **kw))
         self._decode = jax.jit(model.decode_step)
+        # paged steps are built lazily: only attention families page
+        self._decode_paged = None
+        self._prefill_prefix = None
         self._plan_steps: dict = {}  # (plan key, pool size) → jitted plan step
         self._decode_plan = None
         self.stats = ServeStats()
         if decode_plan is not None:
             self.set_decode_plan(decode_plan)
+
+    def _paged_fns(self):
+        if self._decode_paged is None:
+            model, max_seq = self.model, self.max_seq
+            self._decode_paged = jax.jit(model.decode_step_paged)
+            self._prefill_prefix = jax.jit(
+                lambda p, t, pk, pv: model.prefill_with_prefix(p, t, pk, pv, max_seq)
+            )
+        return self._decode_paged, self._prefill_prefix
 
     # ------------------------------------------------------------------
     # the decode step as an advisable region (requests = work items)
@@ -147,9 +178,23 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     # serving entries
-    def scheduler(self, max_batch: int, *, seed: int = 0) -> Scheduler:
-        """A fresh continuous-batching scheduler over ``max_batch`` slots,
-        sharing this engine's stats and decode plan."""
+    def scheduler(
+        self, max_batch: int, *, seed: int = 0, kv_layout: Optional[str] = None
+    ) -> Scheduler:
+        """A fresh continuous-batching scheduler over ``max_batch`` rows
+        (slots, or paged block tables), sharing this engine's stats,
+        jitted steps, and decode plan."""
+        layout = kv_layout or self.kv_layout
+        paged_kw = {}
+        if layout == "paged":
+            decode_paged, prefill_prefix = self._paged_fns()
+            paged_kw = dict(
+                block_size=self.block_size,
+                num_blocks=self.num_blocks,
+                prefix_cache=self.prefix_cache,
+                paged_decode_fn=decode_paged,
+                prefix_prefill_fn=prefill_prefix,
+            )
         return Scheduler(
             self.model,
             self.params,
@@ -159,18 +204,28 @@ class ServingEngine:
             decode_plan=self._decode_plan,
             stats=self.stats,
             seed=seed,
+            kv_layout=layout,
             prefill_fn=self._prefill,
             decode_fn=self._decode,
             plan_step_cache=self._plan_steps,
+            **paged_kw,
         )
 
-    def serve(self, requests, *, max_batch: Optional[int] = None, seed: int = 0) -> dict:
+    def serve(
+        self,
+        requests,
+        *,
+        max_batch: Optional[int] = None,
+        seed: int = 0,
+        kv_layout: Optional[str] = None,
+    ) -> dict:
         """Continuous-batching entry: drive ``requests`` (each with its
         own arrival time, prompt length, and token budget) to completion
-        through a slot pool. Returns rid → generated tokens."""
+        through a slotted or block-paged pool. Returns rid → generated
+        tokens."""
         requests = list(requests)
         mb = max_batch or self.max_batch or max(1, min(8, len(requests)))
-        return self.scheduler(mb, seed=seed).run(requests)
+        return self.scheduler(mb, seed=seed, kv_layout=kv_layout).run(requests)
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:

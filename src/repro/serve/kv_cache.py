@@ -1,20 +1,38 @@
-"""Slotted KV-cache pool for continuous batching.
+"""KV-cache pools for continuous batching: slotted and block-paged.
 
-Owns a fixed pool of ``max_batch`` decode-cache slots (one
-``Model.init_cache(max_batch, max_seq)`` allocation, made once). Slots
-are allocated when a request is admitted and freed when it finishes or
-hits EOS; the decode step always runs over the *whole* pool, so its jit
-shape never changes — liveness is the ``live_mask`` the masked plan
-execution consumes (DESIGN.md §3).
+``SlotKVCache`` owns a fixed pool of ``max_batch`` decode-cache slots
+(one ``Model.init_cache(max_batch, max_seq)`` allocation, made once).
+Slots are allocated when a request is admitted and freed when it
+finishes or hits EOS; the decode step always runs over the *whole*
+pool, so its jit shape never changes — liveness is the ``live_mask``
+the masked plan execution consumes (DESIGN.md §3).
 
-All per-family slot logic rides on ``Model.cache_batch_axes`` /
-``read_cache_slot`` / ``write_cache_slot`` (the batch-axis metadata next
-to ``cache_axes``), so this module never inspects cache leaves itself.
+``PagedKVCache`` replaces the slot's monolithic ``max_seq`` reservation
+with block-granular memory: a ``BlockAllocator`` pool of fixed-size
+blocks, a per-row *block table* mapping logical token positions to
+physical blocks, and (for dense/audio families) a trie-based
+``PrefixCache`` that lets requests whose prompts share a token prefix
+alias the same immutable blocks instead of recomputing them. Admission
+charges blocks (worst case reserved, physical blocks allocated lazily
+as decode crosses block boundaries), so footprint scales with actual
+lengths, not ``max_seq`` (DESIGN.md §3 "Paged cache & prefix reuse").
+
+All per-family cache logic rides on ``Model`` metadata
+(``cache_batch_axes`` / ``read_cache_slot`` / ``write_cache_slot`` for
+slots, ``init_paged_cache`` / ``paged_view`` / ``decode_step_paged``
+for pages), so this module never inspects cache leaves itself.
 """
 from __future__ import annotations
 
 import bisect
+import math
 from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import PREFIX_FAMILIES
+from repro.serve.block import BlockAllocator, PrefixCache
 
 
 class SlotKVCache:
@@ -92,3 +110,252 @@ class SlotKVCache:
         assert not (free & live), "slot both free and live"
         assert free | live == set(range(self.max_batch)), "slot leaked"
         assert self._free == sorted(self._free), "free list unsorted"
+
+
+class PagedKVCache:
+    """Block-paged KV cache with shared-prefix reuse.
+
+    ``max_batch`` decode *rows* (the fixed jit batch, like slots) map
+    through per-row block tables into a pool of ``num_blocks`` physical
+    blocks of ``block_size`` tokens. Admission charges the worst-case
+    block budget (so lazy tail-block allocation can never fail
+    mid-decode), but physical blocks are claimed only as the request
+    actually reaches them — footprint scales with real lengths, and
+    prefix-shared blocks are charged once.
+    """
+
+    def __init__(
+        self,
+        model,
+        max_batch: int,
+        max_seq: int,
+        *,
+        block_size: int = 8,
+        num_blocks: Optional[int] = None,
+        prefix_cache: bool = True,
+        dtype=None,
+    ):
+        self.model = model
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq)
+        self.block_size = int(block_size)
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_seq % self.block_size:
+            raise ValueError(
+                f"max_seq={max_seq} must be a multiple of block_size={block_size}"
+            )
+        self.blocks_per_row = self.max_seq // self.block_size
+        if num_blocks is None:
+            num_blocks = self.max_batch * self.blocks_per_row
+        self.num_blocks = int(num_blocks)
+        # one spare block past the allocator's range: unowned block-table
+        # entries point here, so dead rows' decode writes land in scratch
+        self.null_block = self.num_blocks
+        self.pool = model.init_paged_cache(
+            self.num_blocks + 1, self.block_size, dtype=dtype
+        )
+        cfg = model.cfg
+        # PREFIX_FAMILIES lives next to the model's prefill_with_prefix,
+        # which enforces the same exclusions — the two layers can't drift
+        self.prefix = (
+            PrefixCache(self.block_size)
+            if prefix_cache and cfg.family in PREFIX_FAMILIES and not cfg.kv_quant
+            else None
+        )
+        self.allocator = BlockAllocator(
+            self.num_blocks,
+            on_evict=self.prefix.drop_block if self.prefix is not None else None,
+            is_leaf=self.prefix.is_leaf if self.prefix is not None else None,
+        )
+        self.block_tables = np.full(
+            (self.max_batch, self.blocks_per_row), self.null_block, np.int32
+        )
+        self.cache_len = np.zeros((self.max_batch,), np.int32)
+        self._row_free: list[int] = list(range(self.max_batch))  # ascending
+        self._row_owner: list[Optional[int]] = [None] * self.max_batch
+        self._row_blocks: list[list[int]] = [[] for _ in range(self.max_batch)]
+        self._row_outstanding = [0] * self.max_batch  # reserved, unallocated
+        self._outstanding_total = 0
+
+    # ------------------------------------------------------------------
+    # occupancy (row API mirrors SlotKVCache so the scheduler is shared)
+    @property
+    def n_free(self) -> int:
+        return len(self._row_free)
+
+    @property
+    def n_live(self) -> int:
+        return self.max_batch - len(self._row_free)
+
+    @property
+    def n_free_blocks(self) -> int:
+        """Blocks an arriving request could claim right now: free +
+        LRU-evictable cached, minus live rows' outstanding reservations."""
+        return self.allocator.n_available - self._outstanding_total
+
+    def owner(self, row: int) -> Optional[int]:
+        return self._row_owner[row]
+
+    def live_mask(self):
+        return np.array([o is not None for o in self._row_owner])
+
+    def live_rows(self) -> list[int]:
+        return [i for i, o in enumerate(self._row_owner) if o is not None]
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.block_size)
+
+    # ------------------------------------------------------------------
+    # admission
+    def lookup(self, tokens) -> list[int]:
+        """Prefix-cache hit: block ids covering the longest cached full-
+        block prefix of ``tokens`` (empty when prefix reuse is off)."""
+        if self.prefix is None:
+            return []
+        return self.prefix.match(tokens)
+
+    def try_admit(self, rid: int, tokens, budget: int, n_tokens: Optional[int] = None):
+        """Admit ``rid`` into a free row if the block budget fits:
+        returns (row, hit_ids) or None. Shared prefix blocks alias
+        (refcount++); fresh prompt blocks are allocated now; the decode
+        tail is only *reserved* (allocated lazily by ``ensure_tail``).
+        ``n_tokens`` overrides the cache-row count when the prefill
+        occupies more rows than ``tokens`` (VLM patch embeddings)."""
+        if not self._row_free:
+            return None
+        S = len(tokens) if n_tokens is None else int(n_tokens)
+        hit_ids = self.lookup(tokens)
+        n_total = self.blocks_for(S + budget)
+        n_prompt = self.blocks_for(S)
+        n_parked_hits = sum(self.allocator.is_parked(b) for b in hit_ids)
+        # after reactivating parked hits, enough must remain for this
+        # request's fresh blocks AND every live row's reservations
+        need = (n_total - len(hit_ids)) + n_parked_hits
+        if self.allocator.n_available < self._outstanding_total + need:
+            return None
+        for b in hit_ids:  # reactivate/alias FIRST so eviction can't take them
+            self.allocator.share(b)
+        blocks = list(hit_ids)
+        for _ in range(n_prompt - len(hit_ids)):
+            blocks.append(self.allocator.alloc())
+        row = self._row_free.pop(0)
+        self._row_owner[row] = rid
+        self._row_blocks[row] = blocks
+        self._row_outstanding[row] = n_total - n_prompt
+        self._outstanding_total += self._row_outstanding[row]
+        self.block_tables[row, : len(blocks)] = blocks
+        self.cache_len[row] = S
+        if self.prefix is not None and len(tokens) == S:
+            # register the prompt's immutable full blocks (decode never
+            # writes before position S, so blocks < S // bs stay frozen)
+            self.prefix.insert(tokens, blocks[: S // self.block_size])
+        return row, hit_ids
+
+    # ------------------------------------------------------------------
+    # cache I/O
+    def gather_prefix(self, hit_ids: list[int]):
+        """(k, v) [L, 1, h, KV, hd] — a hit chain's post-RoPE KV rows,
+        dense, for ``Model.prefill_with_prefix``."""
+        from repro.models import attention as attn
+
+        table = jnp.asarray(np.array(hit_ids, np.int32)[None, :])
+        return (
+            attn.gather_block_rows(self.pool["k"], table),
+            attn.gather_block_rows(self.pool["v"], table),
+        )
+
+    def write_prefill(self, row: int, dense_cache, skip_blocks: int = 0) -> None:
+        """Install a request's batch=1 dense prefill cache into its fresh
+        prompt blocks. ``skip_blocks`` leading blocks are a prefix hit —
+        already in the pool, shared, and immutable, so they are not
+        rewritten."""
+        if self._row_owner[row] is None:
+            raise RuntimeError(f"write into free row {row}")
+        bs = self.block_size
+        n_prompt = self.blocks_for(int(self.cache_len[row]))
+        ids = self._row_blocks[row][skip_blocks:n_prompt]
+        if not ids:
+            return
+        idx = jnp.asarray(np.array(ids, np.int32))
+        for name, leaf in self.pool.items():
+            d = dense_cache[name]  # [L, 1, S_dense, ...]
+            L, _, Sd = d.shape[:3]
+            blocks = d.reshape((L, Sd // bs, bs) + d.shape[3:])
+            self.pool[name] = leaf.at[:, idx].set(
+                blocks[:, skip_blocks:n_prompt].astype(leaf.dtype)
+            )
+
+    def ensure_tail(self, row: int) -> None:
+        """Make sure the row's next decode write position has a physical
+        block, claiming one lazily from its reservation if not."""
+        bi = int(self.cache_len[row]) // self.block_size
+        if bi < len(self._row_blocks[row]):
+            return
+        assert bi == len(self._row_blocks[row]) and bi < self.blocks_per_row
+        assert self._row_outstanding[row] > 0, "tail block was not reserved"
+        b = self.allocator.alloc()
+        self._row_blocks[row].append(b)
+        self.block_tables[row, bi] = b
+        self._row_outstanding[row] -= 1
+        self._outstanding_total -= 1
+
+    def advance(self, row: int) -> None:
+        self.cache_len[row] += 1
+
+    # ------------------------------------------------------------------
+    def free_row(self, row: int) -> None:
+        """Retire a request: drop one referent per block (shared prefix
+        blocks survive under their other referents; registered blocks
+        with no referents park in the LRU bench for future prefix hits),
+        release the unclaimed reservation, reset the table row."""
+        if not 0 <= row < self.max_batch:
+            raise IndexError(f"row {row} out of range")
+        if self._row_owner[row] is None:
+            raise RuntimeError(f"double free of row {row}")
+        for b in self._row_blocks[row]:
+            self.allocator.free(
+                b, park=self.prefix is not None and self.prefix.registered(b)
+            )
+        self._outstanding_total -= self._row_outstanding[row]
+        self._row_outstanding[row] = 0
+        self._row_blocks[row] = []
+        self._row_owner[row] = None
+        self.block_tables[row, :] = self.null_block
+        self.cache_len[row] = 0
+        bisect.insort(self._row_free, row)
+
+    def drop_cached(self) -> int:
+        """Evict every parked (cached, unreferenced) block — test/ops
+        hook that restores the cold path. Returns how many were evicted."""
+        n = 0
+        while self.allocator.n_parked:
+            self.allocator.evict(self.allocator.parked_lru()[0])
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Rows and blocks stay consistent: the allocator partition
+        holds, per-row tables mirror the owned-block lists, every block
+        referent is exactly one row, and reservations never exceed what
+        the allocator can still provide."""
+        self.allocator.check_invariants()
+        live_rows = {i for i, o in enumerate(self._row_owner) if o is not None}
+        free_rows = set(self._row_free)
+        assert not (free_rows & live_rows), "row both free and live"
+        assert free_rows | live_rows == set(range(self.max_batch)), "row leaked"
+        refs = [0] * self.num_blocks
+        for row in range(self.max_batch):
+            blocks = self._row_blocks[row]
+            if row not in live_rows:
+                assert not blocks and self._row_outstanding[row] == 0
+            for j, b in enumerate(blocks):
+                assert self.block_tables[row, j] == b, "table/block-list skew"
+                refs[b] += 1
+            assert (self.block_tables[row, len(blocks):] == self.null_block).all()
+        assert refs == self.allocator.refcount, "refcounts not conserved"
+        assert self._outstanding_total == sum(self._row_outstanding)
+        assert self.allocator.n_available >= self._outstanding_total, (
+            "reserved more blocks than the pool can still provide"
+        )

@@ -40,3 +40,41 @@ def make_requests(
             )
         )
     return reqs
+
+
+def make_shared_prefix_requests(
+    n: int,
+    rate_rps: float,
+    *,
+    vocab: int,
+    prefix_len: int,
+    suffix_len: int,
+    max_new_tokens: int,
+    rng: np.random.Generator,
+    prefix=None,
+):
+    """n Poisson-arrival requests whose prompts share one ``prefix_len``-
+    token prefix (a system prompt / few-shot header, the workload the
+    prefix cache targets) followed by a per-request random
+    ``suffix_len``-token tail. Draw with a same-seeded ``rng`` to get an
+    identical workload across engines (requests are stateful, so each
+    engine run needs its own copies); pass an explicit ``prefix`` to
+    share the header across differently-seeded draws (warmup vs
+    measured workloads that must hit the same cache entries)."""
+    from repro.serve.request import Request
+
+    if prefix is None:
+        prefix = rng.integers(0, vocab, size=(prefix_len,)).astype(np.int32)
+    assert len(prefix) == prefix_len
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    reqs = []
+    for i in range(n):
+        suffix = rng.integers(0, vocab, size=(suffix_len,)).astype(np.int32)
+        reqs.append(
+            Request(
+                prompt=np.concatenate([prefix, suffix]),
+                max_new_tokens=max_new_tokens,
+                arrival_time=float(arrivals[i]),
+            )
+        )
+    return reqs

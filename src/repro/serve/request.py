@@ -42,7 +42,8 @@ class Request:
 
     # lifecycle — owned by the scheduler
     state: str = QUEUED
-    slot: Optional[int] = None
+    slot: Optional[int] = None  # slot index (slotted) / decode row (paged)
+    prefix_hit: int = 0  # prompt tokens served from the prefix cache
     tokens: list = field(default_factory=list)
     t_admit: Optional[float] = None  # prefill started (slot allocated)
     t_first: Optional[float] = None  # first token available
@@ -87,6 +88,10 @@ class ServeStats:
     ttft_ms: list = field(default_factory=list)
     tpot_ms: list = field(default_factory=list)
     e2e_ms: list = field(default_factory=list)
+    # prefix-cache accounting (paged layout; zero on the slotted path)
+    prompt_tokens: int = 0
+    prefix_hit_tokens: int = 0
+    n_prefix_hits: int = 0
 
     def reset(self) -> None:
         """Start a run from clean series — percentiles never mix runs."""
@@ -94,6 +99,9 @@ class ServeStats:
         self.ttft_ms.clear()
         self.tpot_ms.clear()
         self.e2e_ms.clear()
+        self.prompt_tokens = 0
+        self.prefix_hit_tokens = 0
+        self.n_prefix_hits = 0
 
     def record(self, req: Request) -> None:
         """Fold a finished request's latencies into the run series."""
@@ -103,6 +111,14 @@ class ServeStats:
             self.tpot_ms.append(req.tpot_ms)
         if req.e2e_ms is not None:
             self.e2e_ms.append(req.e2e_ms)
+        self.prompt_tokens += int(np.asarray(req.prompt).shape[0])
+        self.prefix_hit_tokens += req.prefix_hit
+        self.n_prefix_hits += bool(req.prefix_hit)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from the prefix cache."""
+        return self.prefix_hit_tokens / self.prompt_tokens if self.prompt_tokens else 0.0
 
     def percentile(self, p, series: str = "step_ms") -> float:
         vals = getattr(self, series)
@@ -134,4 +150,8 @@ class ServeStats:
             "p99_step_ms": self.percentile(99),
             "p50_e2e_ms": self.percentile(50, "e2e_ms"),
             "p99_e2e_ms": self.percentile(99, "e2e_ms"),
+            "prompt_tokens": self.prompt_tokens,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": self.prefix_hit_rate,
+            "n_prefix_hits": self.n_prefix_hits,
         }

@@ -1,22 +1,29 @@
-"""Plan-aware continuous-batching scheduler.
+"""Plan-aware continuous-batching scheduler over a slotted or paged pool.
 
 Each ``step()`` (the serving analogue of one Relic task-queue tick):
 
-  1. admits arrived queued requests into free slots — per-request
-     prefill, written into the slot pool, first token sampled from the
-     prefill logits (that instant is the request's TTFT);
-  2. runs ONE batched decode over the full fixed-shape slot pool —
+  1. admits arrived queued requests — per-request prefill, written into
+     the pool, first token sampled from the prefill logits (that instant
+     is the request's TTFT). Slotted admission charges one slot per
+     request; paged admission charges *blocks* (worst case reserved,
+     physical blocks claimed lazily) and, on a prefix-cache hit,
+     prefills only the un-cached prompt suffix — shared blocks are
+     aliased, which is where the shared-prompt TTFT drop comes from;
+  2. runs ONE batched decode over the full fixed-shape row pool —
      through the engine's accepted ``RegionPlan`` via masked execution
-     when one is set — so neither jit nor the plan retraces as the
-     number of live requests changes (the live mask is data, not shape);
-  3. samples the next token per live slot, retires requests that hit
-     their token budget or EOS, and frees their slots.
+     when one is set (slotted layout), or through the block tables
+     (paged layout) — so neither jit nor the plan retraces as the
+     number of live requests changes (liveness, block tables, and
+     per-row lengths are data, not shape);
+  3. samples the next token per live row, retires requests that hit
+     their token budget or EOS, and frees their slots/blocks.
 
-Dead slots still flow through the decode (static shapes); their outputs
-are ignored (plain path) or zeroed (masked plan path). Greedy decoding
-is batch-size independent per row, so a half-full continuous batch
-reproduces the fixed-batch baseline token-for-token — the property the
-serving tests pin.
+Dead rows still flow through the decode (static shapes); their outputs
+are ignored (plain path), zeroed (masked plan path), or routed to the
+null block (paged writes). Greedy decoding is batch-size independent
+per row, so a half-full continuous batch reproduces the fixed-batch
+baseline token-for-token — and the paged gather/scatter reproduces the
+slotted layout bitwise — the properties the serving tests pin.
 
 Driving is open-loop: ``run()`` injects requests at their
 ``arrival_time`` regardless of completions, which is the honest way to
@@ -31,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.kv_cache import SlotKVCache
+from repro.serve.kv_cache import PagedKVCache, SlotKVCache
 from repro.serve.request import DECODE, FINISHED, PREFILL, Request, ServeStats
 
 
@@ -47,8 +54,14 @@ class Scheduler:
         decode_plan=None,
         stats: Optional[ServeStats] = None,
         seed: int = 0,
+        kv_layout: str = "slot",
+        block_size: int = 8,
+        num_blocks: Optional[int] = None,
+        prefix_cache: bool = True,
         prefill_fn=None,
         decode_fn=None,
+        paged_decode_fn=None,
+        prefix_prefill_fn=None,
         plan_step_cache: Optional[dict] = None,
     ):
         self.model = model
@@ -56,12 +69,31 @@ class Scheduler:
         self.max_seq = max_seq
         self.temperature = float(temperature)
         self.seed = seed
-        self.kv = SlotKVCache(model, max_batch, max_seq)
+        if kv_layout not in ("slot", "paged"):
+            raise ValueError(f"kv_layout must be 'slot' or 'paged', got {kv_layout!r}")
+        self.kv_layout = kv_layout
+        if kv_layout == "paged":
+            if decode_plan is not None:
+                raise ValueError(
+                    "decode plans route through the slotted layout; "
+                    "use kv_layout='slot' to serve through a RegionPlan"
+                )
+            self.kv = PagedKVCache(
+                model,
+                max_batch,
+                max_seq,
+                block_size=block_size,
+                num_blocks=num_blocks,
+                prefix_cache=prefix_cache,
+            )
+        else:
+            self.kv = SlotKVCache(model, max_batch, max_seq)
         self.stats = stats if stats is not None else ServeStats()
         self._queue: list[Request] = []  # sorted by (arrival_time, rid)
-        self._active: dict[int, Request] = {}  # slot → request
+        self._active: dict[int, Request] = {}  # row → request
         self._n_admitted = 0  # per-run sampling-key ordinal (not the global rid)
-        self._tok = jnp.zeros((max_batch,), jnp.int32)  # last token per slot
+        self._ordinals: dict[int, int] = {}  # rid → ordinal, admission → first sample
+        self._tok = jnp.zeros((max_batch,), jnp.int32)  # last token per row
         self._keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(max_batch, dtype=jnp.uint32))
         # jitted steps are engine-owned when schedulers are engine-made, so
         # repeated generate()/serve() calls reuse compiled executables
@@ -69,6 +101,14 @@ class Scheduler:
             lambda p, t, **kw: model.prefill(p, t, max_seq, **kw)
         )
         self._decode = decode_fn or jax.jit(model.decode_step)
+        self._decode_paged = paged_decode_fn or (
+            jax.jit(model.decode_step_paged) if kv_layout == "paged" else None
+        )
+        self._prefill_prefix = prefix_prefill_fn or (
+            jax.jit(lambda p, t, pk, pv: model.prefill_with_prefix(p, t, pk, pv, max_seq))
+            if kv_layout == "paged"
+            else None
+        )
         self._plan_steps = plan_step_cache if plan_step_cache is not None else {}
         self._decode_plan = None
         self._t0: Optional[float] = None
@@ -81,6 +121,8 @@ class Scheduler:
         """Route the pool decode through an accepted ``RegionPlan`` (as
         produced by advising ``decode_region`` — stack combine only,
         since request order is externally visible)."""
+        if plan is not None and self.kv_layout == "paged":
+            raise ValueError("decode plans are not supported on the paged layout")
         if plan is not None and plan.key.combine != "stack":
             raise ValueError(
                 "decode plan must preserve per-request order (combine='stack')"
@@ -131,8 +173,20 @@ class Scheduler:
             # the newest KV entry — fail loudly at submission instead
             raise ValueError(
                 f"request {req.rid}: prompt + max_new_tokens = {need} "
-                f"exceeds the slot capacity max_seq={self.max_seq}"
+                f"exceeds the row capacity max_seq={self.max_seq}"
             )
+        if self.kv_layout == "paged":
+            # a request whose block budget can never fit would sit at the
+            # queue head forever (admission is FIFO) — reject it loudly,
+            # in the block-granular currency admission actually charges
+            nb = self.kv.blocks_for(need)
+            if nb > self.kv.num_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {nb} KV blocks "
+                    f"({need} tokens at block_size={self.kv.block_size}) but the "
+                    f"pool holds {self.kv.num_blocks} blocks total "
+                    f"({self.kv.n_free_blocks} free) — it can never be admitted"
+                )
         req.state = "queued"
         self._queue.append(req)
         self._queue.sort(key=lambda r: (r.arrival_time, r.rid))
@@ -142,16 +196,32 @@ class Scheduler:
             return jnp.argmax(logits_row, axis=-1)
         return jax.random.categorical(key, logits_row / self.temperature, axis=-1)
 
+    def _start_decode(self, req: Request, row: int, logits_row, now: float) -> None:
+        """Shared admission tail: sample the first token from the prefill
+        logits (TTFT is this instant) and arm the decode row."""
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.seed), self._ordinals.pop(req.rid)
+        )
+        key, sub = jax.random.split(key)
+        tok0 = int(self._sample_row(logits_row, sub))
+        req.t_first = self._clock()  # first token exists from here
+        req.tokens.append(tok0)
+        req.state = DECODE
+        self._tok = self._tok.at[row].set(tok0)
+        self._keys = self._keys.at[row].set(key)
+        self._active[row] = req
+        if len(req.tokens) >= req.max_new_tokens or tok0 == req.eos_id:
+            self._retire(req, self._clock())
+
     def _admit(self, reqs: list, now: float) -> None:
-        """Admit a wave of arrived requests: same-shape prompts prefill as
-        ONE batched call (the fixed-batch ``generate()`` wave is a single
-        batch-B prefill, as before the scheduler existed), each row then
-        written into its own slot via ``read_cache_slot``."""
-        ordinals = {}
+        """Admit a wave of arrived requests into slots: same-shape prompts
+        prefill as ONE batched call (the fixed-batch ``generate()`` wave
+        is a single batch-B prefill, as before the scheduler existed),
+        each row then written into its own slot via ``read_cache_slot``."""
         for req in reqs:
             # key by the per-run admission ordinal, not the process-global
             # rid: the same seed reproduces the same tokens across runs
-            ordinals[req.rid] = self._n_admitted
+            self._ordinals[req.rid] = self._n_admitted
             self._n_admitted += 1
             req.state, req.t_admit = PREFILL, now
         groups: dict = {}
@@ -168,42 +238,71 @@ class Scheduler:
                 slot = self.kv.alloc(req.rid)
                 req.slot = slot
                 self.kv.write(slot, self.model.read_cache_slot(cache, i))
-                key = jax.random.fold_in(
-                    jax.random.PRNGKey(self.seed), ordinals[req.rid]
-                )
-                key, sub = jax.random.split(key)
-                tok0 = int(self._sample_row(logits[i], sub))
-                req.t_first = self._clock()  # first token exists from here
-                req.tokens.append(tok0)
-                req.state = DECODE
-                self._tok = self._tok.at[slot].set(tok0)
-                self._keys = self._keys.at[slot].set(key)
-                self._active[slot] = req
-                if len(req.tokens) >= req.max_new_tokens or tok0 == req.eos_id:
-                    self._retire(req, self._clock())
+                self._start_decode(req, slot, logits[i], now)
+
+    def _try_admit_paged(self, req: Request, now: float) -> bool:
+        """Paged admission, one request at a time: prefix-match the
+        prompt, charge the block budget, prefill only the un-cached
+        suffix on a hit. Returns False when the row/block budget does
+        not fit yet (the request stays queued)."""
+        prompt = np.asarray(req.prompt)
+        n_cache = len(prompt)
+        tokens = tuple(int(t) for t in prompt)
+        if req.patch_embeds is not None:
+            # patch embeddings occupy cache rows ahead of the tokens and
+            # are not token-addressable — no prefix matching for them
+            n_cache += int(jnp.asarray(req.patch_embeds).shape[0])
+            tokens = ()
+        got = self.kv.try_admit(req.rid, tokens, req.max_new_tokens, n_tokens=n_cache)
+        if got is None:
+            return False
+        row, hit_ids = got
+        self._ordinals[req.rid] = self._n_admitted
+        self._n_admitted += 1
+        req.state, req.t_admit = PREFILL, now
+        req.slot = row
+        hit = len(hit_ids) * self.kv.block_size
+        req.prefix_hit = hit
+        if hit:
+            pk, pv = self.kv.gather_prefix(hit_ids)
+            logits, cache = self._prefill_prefix(
+                self.params, jnp.asarray(prompt[hit:])[None, :], pk, pv
+            )
+        else:
+            kw = {}
+            if req.patch_embeds is not None:
+                kw["patch_embeds"] = jnp.asarray(req.patch_embeds)[None]
+            logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None, :], **kw)
+        self.kv.write_prefill(row, cache, skip_blocks=len(hit_ids))
+        self._start_decode(req, row, logits[0], now)
+        return True
 
     def _retire(self, req: Request, now: float) -> None:
         req.state, req.t_finish = FINISHED, now
         self.stats.record(req)
-        self.kv.free(req.slot)
+        if self.kv_layout == "paged":
+            self.kv.free_row(req.slot)
+        else:
+            self.kv.free(req.slot)
         del self._active[req.slot]
 
     # ------------------------------------------------------------------
-    def step(self, now: Optional[float] = None) -> bool:
-        """Admit arrived requests, then run one batched decode over the
-        live set. Returns False when there was nothing to do."""
-        if now is None:
-            now = self._clock()
-        wave = []
-        while self._queue and self._queue[0].arrival_time <= now and len(wave) < self.kv.n_free:
-            wave.append(self._queue.pop(0))
-        if wave:
-            self._admit(wave, now)
-        if not self._active:
-            return bool(wave)
-
-        mask = self.kv.live_mask()
-        t0 = time.perf_counter()
+    def _decode_pool(self, mask):
+        """One batched decode over the full row pool; returns logits and
+        installs the new cache."""
+        if self.kv_layout == "paged":
+            for row in self._active:
+                self.kv.ensure_tail(row)
+            logits, new_pool = self._decode_paged(
+                self.params,
+                self.kv.pool,
+                jnp.asarray(self.kv.block_tables),
+                jnp.asarray(self.kv.cache_len),
+                self._tok[:, None],
+            )
+            logits.block_until_ready()
+            self.kv.pool = new_pool
+            return logits
         if self._decode_plan is not None:
             logits, new_cache = self._plan_decode(
                 self.kv.cache, self._tok, jnp.asarray(mask)
@@ -213,8 +312,42 @@ class Scheduler:
                 self.params, self.kv.cache, self._tok[:, None]
             )
         logits.block_until_ready()
-        self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
         self.kv.cache = new_cache
+        return logits
+
+    def step(self, now: Optional[float] = None) -> bool:
+        """Admit arrived requests, then run one batched decode over the
+        live set. Returns False when there was nothing to do."""
+        if now is None:
+            now = self._clock()
+        admitted = False
+        if self.kv_layout == "paged":
+            while self._queue and self._queue[0].arrival_time <= now:
+                if not self._try_admit_paged(self._queue[0], now):
+                    break
+                self._queue.pop(0)
+                admitted = True
+        else:
+            wave = []
+            while (
+                self._queue
+                and self._queue[0].arrival_time <= now
+                and len(wave) < self.kv.n_free
+            ):
+                wave.append(self._queue.pop(0))
+            if wave:
+                self._admit(wave, now)
+                admitted = True
+        if not self._active:
+            return admitted
+
+        mask = self.kv.live_mask()
+        t0 = time.perf_counter()
+        logits = self._decode_pool(mask)
+        self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
+        if self.kv_layout == "paged":
+            for row in self._active:
+                self.kv.advance(row)
 
         keys, subs = jax.vmap(jax.random.split, out_axes=1)(self._keys)
         nxt = jax.vmap(self._sample_row)(logits, subs)
@@ -222,8 +355,8 @@ class Scheduler:
         self._tok = jnp.where(live, nxt, self._tok)
         self._keys = jnp.where(live[:, None], keys, self._keys)
         nxt_host = np.asarray(nxt)
-        for slot, req in list(self._active.items()):
-            tok = int(nxt_host[slot])
+        for row, req in list(self._active.items()):
+            tok = int(nxt_host[row])
             req.tokens.append(tok)
             if len(req.tokens) >= req.max_new_tokens or tok == req.eos_id:
                 self._retire(req, self._clock())
