@@ -8,7 +8,9 @@
   §Serving     open-loop Poisson-arrival load on the continuous-batching
                serving core (p50/p99 TTFT, per-token latency), plus the
                shared-prefix reuse-on/off TTFT comparison on the paged
-               KV cache
+               KV cache and the speculative-decode K-sweep (n-gram
+               drafter vs the K=0 baseline, acceptance rate + advised
+               depth)
 
 Every run writes ``BENCH_aira.json`` — per-benchmark predicted/realized
 gain plus the µbench wall-clock — so the perf trajectory is machine-
@@ -51,7 +53,8 @@ def write_summary(rows, gm_pos, gm_all, ubench_us, serving=None, path="BENCH_air
     calibrated overlap model; µbench is measured CPU wall-clock;
     ``serving`` is the open-loop load test's p50/p99 TTFT + per-token
     latency from benchmarks/serving_load.py, including the
-    ``shared_prefix`` reuse-on/off comparison on the paged engine)."""
+    ``shared_prefix`` reuse-on/off comparison on the paged engine and
+    the ``speculative`` K-sweep vs the K=0 greedy baseline)."""
     summary = {
         "benchmarks": [
             {
@@ -93,6 +96,10 @@ def main() -> None:
     # not reduced under --fast: the reuse-on/off TTFT comparison needs
     # enough requests for stable percentiles, and runs in seconds anyway
     serving["shared_prefix"] = serving_load.run_shared_prefix()
+    print()
+    # likewise un-reduced: the K-sweep's token-identity and nonzero-
+    # acceptance asserts are the tracked speculative-decode contract
+    serving["speculative"] = serving_load.run_speculative()
     write_summary(rows, gm_pos, gm_all, ubench_us, serving=serving)
 
 

@@ -11,14 +11,18 @@ Two modes:
   reported.
 
 Either mode optionally runs with the int8 KV cache, with the block-
-paged KV cache + prefix reuse (``--paged``, attention families), and
-optionally advised by Aira (``--aira`` exposes the decode step as a
-Region, advises it, and routes decoding through the accepted RegionPlan
-— masked over the active slots in open-loop mode; slotted layout only).
+paged KV cache + prefix reuse (``--paged``, attention families), with
+speculative decoding (``--spec K``: the n-gram prompt-lookup drafter
+proposes K tokens per verify step; greedy token streams are unchanged
+by construction, and the run reports the measured acceptance rate —
+DESIGN.md §3.2), and optionally advised by Aira (``--aira`` exposes the
+decode step as a Region, advises it, and routes decoding through the
+accepted RegionPlan — masked over the active slots in open-loop mode;
+slotted layout only, and mutually exclusive with ``--spec``).
 
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
-      [--int8-kv] [--paged] [--tokens 32] [--batch 4] [--aira]
-      [--open-loop 8] [--rate 20]
+      [--int8-kv] [--paged] [--spec 4] [--tokens 32] [--batch 4]
+      [--aira] [--open-loop 8] [--rate 20]
 """
 import argparse
 import dataclasses
@@ -40,6 +44,9 @@ def main():
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--paged", action="store_true",
                     help="block-paged KV cache with shared-prefix reuse")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="speculative decoding: K n-gram draft tokens per verify "
+                         "(0 = off; token streams stay exactly greedy)")
     ap.add_argument("--aira", action="store_true",
                     help="advise the decode step and serve through its RegionPlan")
     ap.add_argument("--open-loop", type=int, default=0, metavar="N",
@@ -51,11 +58,16 @@ def main():
     cfg = get_config(args.arch).reduced()
     if args.int8_kv:
         cfg = dataclasses.replace(cfg, kv_quant=True)
+    if args.spec and args.aira:
+        raise SystemExit("--spec and --aira both rewrite the decode step; pick one")
     model = Model(cfg)
     params, _ = model.init(jax.random.key(0))
+    from repro.serve import SpecConfig
+
     engine = ServingEngine(
         model, params, max_seq=256,
         kv_layout="paged" if args.paged else "slot",
+        spec=SpecConfig(k=args.spec, drafter="ngram") if args.spec else None,
     )
 
     prompts = jax.random.randint(jax.random.key(1), (args.batch, 16), 0, cfg.vocab_size)
@@ -72,7 +84,8 @@ def main():
             print("decode routed through RegionPlan:", d.plan.describe())
 
     print(
-        f"arch={args.arch} int8_kv={args.int8_kv} paged={args.paged} aira={args.aira}"
+        f"arch={args.arch} int8_kv={args.int8_kv} paged={args.paged} "
+        f"spec_k={args.spec} aira={args.aira}"
     )
     if args.open_loop > 0:
         from repro.serve.load import make_requests
@@ -97,6 +110,16 @@ def main():
         out = engine.generate(prompts, args.tokens)
         print(f"generated {out.shape} tokens; first row: {out[0][:12].tolist()}")
         print(f"decode latency: {engine.stats.summary()}")
+    if args.spec:
+        # absent when no verify round ever ran (e.g. every request
+        # retired on its prefill token)
+        s = engine.stats.serving_summary().get("speculative")
+        if s is not None:
+            print(
+                f"speculative: K={s['k']} acceptance={s['acceptance_rate']:.2f} "
+                f"({s['accepted']}/{s['proposed']} draft tokens; "
+                f"draft p50={s['p50_draft_ms']:.2f}ms verify p50={s['p50_verify_ms']:.2f}ms)"
+            )
 
 
 if __name__ == "__main__":

@@ -71,6 +71,48 @@ AIRA_SPEC = (
 
 
 # ---------------------------------------------------------------------------
+# The serving-layer speculation flow (DESIGN.md §3.2): the same advisory
+# shape as AIRA_SPEC — run a cheap helper stream, verify, commit only
+# what survives, and gate the whole mechanism on a predicted win — one
+# level up, at the decode step. Deliberately NOT part of AIRA_SPEC (the
+# compute-region pipeline is pinned by its golden decisions); the
+# ``speculate`` stage rides in DEFAULT_TOOLS but reports only for
+# regions carrying a speculation measurement.
+
+SERVING_SPEC = (
+    Stage(
+        "draft",
+        "serve.speculative.DraftSource.propose",
+        "Run the helper stream: K proposed tokens per live row, from the "
+        "n-gram prompt-lookup drafter or a small draft model sharing the "
+        "tokenizer space.",
+    ),
+    Stage(
+        "verify",
+        "models.model.Model.verify_step",
+        "One fixed-K target forward over [pending token, K drafts]; "
+        "greedy-equivalence acceptance compares each draft to the "
+        "previous position's argmax.",
+        reject_on="draft token != target argmax (suffix rejected)",
+    ),
+    Stage(
+        "rollback",
+        "serve.kv_cache.PagedKVCache.truncate_row",
+        "Rewind rejected entries (SlotKVCache.truncate_row likewise): "
+        "committed lengths drop, claimed tail blocks release back to "
+        "their reservation; shared prefix blocks are never touched.",
+    ),
+    Stage(
+        "speculate",
+        "core.tools.SpeculationAdvisorTool",
+        "Price expected per-output-token latency from measured draft "
+        "cost + acceptance rate; pick K in {0, 2, 4, 8} per workload.",
+        reject_on="predicted gain <= threshold → K=0",
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
 # The 20 Relic usage examples (paper §V.3). Each is (per-item fn, item
 # maker) — restructured with relic_pfor and asserted equal to vmap(fn).
 

@@ -197,12 +197,106 @@ class RelicRestructureTool:
         )
 
 
+# ---------------------------------------------------------------------------
+# serving-layer speculation advice (the OverlapSimTool analogue one
+# level up: price a helper stream before committing to it)
+
+
+@dataclass
+class SpecMeasurement:
+    """Measured speculative-serving profile — what the advisory gate
+    prices, as ``ProfileTool`` packages a region's cost as a Microtask.
+
+    ``draft_ms_per_token`` is the draft stream's marginal cost;
+    ``verify_ms`` maps speculation depth K to one verify-step
+    wall-clock (K=0 being the plain decode step); ``acceptance_rate``
+    is the measured per-draft-token greedy acceptance probability."""
+
+    draft_ms_per_token: float
+    verify_ms: dict
+    acceptance_rate: float
+
+    def verify_cost(self, k: int) -> float:
+        """Verify-step cost at depth ``k``, linearly interpolated (and
+        clamped) between the measured depths."""
+        ks = sorted(self.verify_ms)
+        if k in self.verify_ms:
+            return float(self.verify_ms[k])
+        lo = max((x for x in ks if x < k), default=ks[0])
+        hi = min((x for x in ks if x > k), default=ks[-1])
+        if hi == lo:
+            return float(self.verify_ms[lo])
+        w = (k - lo) / (hi - lo)
+        return float((1 - w) * self.verify_ms[lo] + w * self.verify_ms[hi])
+
+
+def expected_tokens_per_round(p: float, k: int) -> float:
+    """E[tokens committed per verify round] at depth ``k`` under i.i.d.
+    per-token acceptance probability ``p``: 1 + p + p² + … + p^k (the
+    round always commits at least the corrected token)."""
+    return float(sum(p**i for i in range(k + 1)))
+
+
+class SpeculationAdvisorTool:
+    """Sniper-gate analogue for speculative serving: price expected
+    per-output-token latency at each candidate depth from a measured
+    draft cost + acceptance rate, and pick K ∈ ``ks`` — K=0 (don't
+    speculate) unless the predicted gain clears the threshold, the same
+    commit-only-on-predicted-win rule as ``OverlapSimTool``.
+
+    As a pipeline stage it reports only for regions carrying a
+    ``spec_measurement`` (compute regions silently SKIP, so the
+    advisory stage log — and the golden decisions — are unchanged for
+    non-serving workloads); ``serve/speculative.advise_depth`` is the
+    measuring front end and ``engine.serve(spec=...)`` honors the
+    decision."""
+
+    name = "speculate"
+
+    def __init__(self, ks=(0, 2, 4, 8)):
+        self.ks = tuple(ks)
+
+    def choose(self, m: SpecMeasurement, threshold: float = 0.02):
+        """(chosen K, predicted gain, log line) for measurement ``m``."""
+        base = m.verify_cost(0)
+        best_k, best_cost = 0, base
+        for k in self.ks:
+            if k <= 0:
+                continue
+            cost = (k * m.draft_ms_per_token + m.verify_cost(k)) / (
+                expected_tokens_per_round(m.acceptance_rate, k)
+            )
+            if cost < best_cost:
+                best_k, best_cost = k, cost
+        gain = (base / best_cost - 1.0) if best_cost > 0 else 0.0
+        if gain <= threshold:
+            best_k, best_cost, gain = 0, base, 0.0
+        log = (
+            f"accept={m.acceptance_rate:.2f} "
+            f"draft={m.draft_ms_per_token:.3f}ms/tok "
+            f"base={base:.2f}ms/tok → K={best_k} "
+            f"({best_cost:.2f}ms/tok, {gain:+.1%})"
+        )
+        return best_k, gain, log
+
+    def run(self, region, ctx: ToolContext) -> StageResult:
+        m = ctx.artifacts.get(
+            "spec_measurement", getattr(region, "spec_measurement", None)
+        )
+        if m is None:
+            return StageResult(self.name, SKIP)
+        k, gain, log = self.choose(m, ctx.gate_threshold)
+        ctx.artifacts["spec_k"] = k
+        return StageResult(self.name, PASS, log, payload=k)
+
+
 DEFAULT_TOOLS: tuple = (
     ProfileTool(),
     StaticDepsTool(),
     DynamicDepsTool(),
     OverlapSimTool(),
     RelicRestructureTool(),
+    SpeculationAdvisorTool(),
 )
 
 

@@ -164,10 +164,12 @@ def _triangular_attention(q, k, v, n_rep, scale, chunk, rules):
 
 
 def scatter_token(stack, new, cache_len, layer_idx):
-    """Append one token per batch row into a layer-stacked cache, each row
-    at its *own* length. ``stack`` [L,B,Smax,...]; ``new`` [B,1,...];
-    ``cache_len`` [B]. Under continuous batching the batch rows are slots
-    of different requests decoding at divergent positions, so the write
+    """Append tokens per batch row into a layer-stacked cache, each row
+    at its *own* length. ``stack`` [L,B,Smax,...]; ``new`` [B,T,...]
+    (T=1 for decode, T=K+1 for speculative verify — the slice write
+    appends all T rows starting at the row's length); ``cache_len``
+    [B]. Under continuous batching the batch rows are slots of
+    different requests decoding at divergent positions, so the write
     position is per-row — not the shared ``cache_len[0]`` a fixed batch
     would allow."""
     zero = jnp.int32(0)
@@ -180,8 +182,8 @@ def scatter_token(stack, new, cache_len, layer_idx):
 
 
 def scatter_token_flat(cache, new, cache_len):
-    """Per-row single-token append for a per-layer (non-stacked) cache:
-    ``cache`` [B,Smax,...]; ``new`` [B,1,...]; ``cache_len`` [B]."""
+    """Per-row token append for a per-layer (non-stacked) cache:
+    ``cache`` [B,Smax,...]; ``new`` [B,T,...]; ``cache_len`` [B]."""
     return jax.vmap(
         lambda cb, nb, pos: jax.lax.dynamic_update_slice_in_dim(cb, nb, pos, axis=0)
     )(cache, new, cache_len)
@@ -211,6 +213,63 @@ def scatter_block_token(pool_leaf, token_rows, block_ids, offsets):
     target), so the scatter is conflict-free; dead rows target the null
     block."""
     return pool_leaf.at[:, block_ids, offsets].set(token_rows)
+
+
+def scatter_block_tokens(pool_leaf, token_rows, block_ids, offsets):
+    """Append T tokens per decode row into their tail blocks in place.
+
+    ``pool_leaf`` [L, NB, BS, ...]; ``token_rows`` [L, B, T, ...] (the
+    speculative-verify KV rows); ``block_ids``/``offsets`` [B, T] —
+    per-token physical block and in-block position (the T positions may
+    span a block boundary; the scheduler pre-claims every tail block
+    the verify can reach via ``ensure_tail_n``). Live rows write
+    exclusively-owned blocks; dead rows' table entries all point at the
+    null block, so their (possibly colliding) writes land in scratch."""
+    return pool_leaf.at[:, block_ids, offsets].set(token_rows)
+
+
+def verify_attention(q, k_cache, v_cache, cache_len, *, rules=None):
+    """Multi-token (speculative verify) attention over the decode cache.
+
+    q [B,T,H,hd] are T proposed tokens at absolute positions
+    ``cache_len + arange(T)`` (their KV rows already scattered into the
+    caches); caches [B,Smax,KV,hd]; cache_len [B] committed lengths.
+    Query t attends to cache positions < cache_len + t + 1 — the same
+    single-pass masked softmax as ``decode_attention`` with one extra
+    *static* query axis, so each query row's reduction runs over the
+    identical masked [Smax] series the sequential decode would see. T
+    is shape, acceptance is data: one trace serves every acceptance
+    pattern at a given speculation depth (DESIGN.md §3.2).
+    """
+    B, T, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, T, KV, g, hd)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k_cache).astype(jnp.float32) * scale
+    valid = (
+        jnp.arange(Smax)[None, None, :]
+        < (cache_len[:, None] + jnp.arange(T)[None, :] + 1)[:, :, None]
+    )  # [B, T, Smax]
+    s = jnp.where(valid[:, None, None, :, :], s, NEG)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :, :], jnp.exp(s - m), 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bkgts,bskd->btkgd",
+        (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+        v_cache,
+    )
+    return out.reshape(B, T, H, hd)
+
+
+def _cached_attention(q, k_cache, v_cache, cache_len, *, rules=None):
+    """Dispatch decode-cache attention on the (static) query count: the
+    single-token path keeps the exact decode numerics, T>1 is the
+    speculative verify."""
+    if q.shape[1] == 1:
+        return decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
+    return verify_attention(q, k_cache, v_cache, cache_len, rules=rules)
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, rules=None):
@@ -339,7 +398,7 @@ def attention_block(
             jax.lax.dynamic_index_in_dim(vs_all, li, 0, keepdims=False),
             x.dtype,
         )
-        out = decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
+        out = _cached_attention(q, k_cache, v_cache, cache_len, rules=rules)
         new_kv = (k_all, ks_all, v_all, vs_all)
     elif len(cache) == 3:
         # stacked-cache decode: (k_all [L,B,S,KV,hd], v_all, layer_idx).
@@ -354,16 +413,16 @@ def attention_block(
         v_all = scatter_token(v_all, v, cache_len, li)
         k_cache = jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False)
         v_cache = jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False)
-        out = decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
+        out = _cached_attention(q, k_cache, v_cache, cache_len, rules=rules)
         new_kv = (k_all, v_all)
     else:
         k_cache, v_cache = cache
         k_cache = constrain(rules, k_cache, ("batch", "kv_seq", "kv_heads", None))
         v_cache = constrain(rules, v_cache, ("batch", "kv_seq", "kv_heads", None))
-        # insert the new token at each row's own cache_len
+        # insert the new token(s) at each row's own cache_len
         k_cache = scatter_token_flat(k_cache, k, cache_len)
         v_cache = scatter_token_flat(v_cache, v, cache_len)
-        out = decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
+        out = _cached_attention(q, k_cache, v_cache, cache_len, rules=rules)
         new_kv = (k_cache, v_cache)
 
     if params["wo"].ndim == 2:  # flat-TP layout

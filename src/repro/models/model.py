@@ -32,9 +32,22 @@ ATTN_FAMILIES = ("dense", "moe", "audio", "vlm")
 # to a cold prefill, so KV prefix reuse cannot change tokens. MoE is out
 # (dispatch capacity depends on tokens-per-call, so suffix routing can
 # drop different tokens), VLM is out (patch embeddings occupy cache rows
-# that are not token-addressable). int8-KV is excluded separately (prefix
-# rows would be requantized on refill).
+# that are not token-addressable). int8-KV rides along, but only
+# *approximately*: the suffix path attends over DEQUANTIZED prefix K/V
+# (≤1/254 relative error vs the fp rows the cold run saw), so deeper-
+# layer suffix K/V and the first-token logits carry a quantization-level
+# perturbation — greedy tokens agree unless an argmax near-tie flips
+# (the differential test pins the tracked config; subsequent decode
+# steps read the same quantized pool either way).
 PREFIX_FAMILIES = ("dense", "audio")
+
+# Families the speculative verify_step supports: the KV cache must be
+# rewindable (truncating `len` un-commits rejected draft entries). SSM
+# and hybrid are out — recurrent state cannot be truncated — and MoE is
+# out because dispatch capacity depends on tokens-per-call, so a K+1
+# token verify could route (and drop) differently than the sequential
+# decode it must reproduce token-for-token.
+SPEC_FAMILIES = ("dense", "audio", "vlm")
 
 # baseline switch (launch.dryrun --legacy): pre-optimization decode scan
 # slices the cache per layer via xs/ys, which writes a full layer-cache
@@ -427,6 +440,103 @@ class Model:
             new_pool[name] = attn.scatter_block_token(leaf, token_rows, bid, off)
         return logits, new_pool
 
+    # ------------------------------------------------------------------
+    # speculative verify (serve/speculative.py)
+    def verify_step(self, params, cache, tokens):
+        """tokens [B,T] (pending token + T-1 draft tokens) → (logits
+        [B,T,V], new cache with len += T). One speculative verify.
+
+        The draft stream's proposals run as ONE forward over the decode
+        cache: position t's logits predict the token after
+        ``tokens[:, t]``, so greedy acceptance compares each draft
+        against the previous position's argmax. T is static (one jit
+        trace per speculation depth K = T-1) while acceptance counts
+        stay data — the caller rewinds rejected tail entries afterwards
+        with ``truncate_row`` (stale KV rows past the committed length
+        are masked off by ``len`` and overwritten by later writes, so
+        only the lengths rewind). ``SPEC_FAMILIES`` only: rewinding
+        needs a length-addressed cache, and MoE token-count-dependent
+        routing would break greedy equivalence."""
+        cfg, rules = self.cfg, self.rules
+        if cfg.family not in SPEC_FAMILIES:
+            raise ValueError(
+                f"verify_step is only greedy-equivalent for {SPEC_FAMILIES}, "
+                f"got {cfg.family!r} (SSM state cannot rewind; MoE capacity "
+                "routing depends on tokens-per-call)"
+            )
+        B, T = tokens.shape
+        x = embed_tokens(params["embed"], tokens, rules)
+        x = constrain(rules, x, ("batch", "seq", None))
+        positions = cache["len"][:, None] + jnp.arange(T)[None, :]
+
+        if cfg.kv_quant:
+
+            def body_q(carry, xs):
+                x, ks, kss, vs, vss = carry
+                lp, li = xs
+                xo, _, (ks, kss, vs, vss) = self._dense_layer(
+                    x, lp, "dense", positions=positions,
+                    cache=(ks, kss, vs, vss, li), cache_len=cache["len"],
+                )
+                return (xo, ks, kss, vs, vss), None
+
+            (x, ks, kss, vs, vss), _ = jax.lax.scan(
+                body_q,
+                (x, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"]),
+                (params["layers"], jnp.arange(cfg.num_layers)),
+            )
+            new_cache = {"k": ks, "k_scale": kss, "v": vs, "v_scale": vss,
+                         "len": cache["len"] + T}
+        else:
+
+            def body(carry, xs):
+                x, ks, vs = carry
+                lp, li = xs
+                xo, _, (ks, vs) = self._dense_layer(
+                    x, lp, "dense", positions=positions,
+                    cache=(ks, vs, li), cache_len=cache["len"],
+                )
+                return (xo, ks, vs), None
+
+            (x, ks, vs), _ = jax.lax.scan(
+                body,
+                (x, cache["k"], cache["v"]),
+                (params["layers"], jnp.arange(cfg.num_layers)),
+            )
+            new_cache = {"k": ks, "v": vs, "len": cache["len"] + T}
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("btd,dv->btv", x, head)
+        logits = constrain(rules, logits, ("batch", None, "vocab"))
+        return logits, new_cache
+
+    def verify_step_paged(self, params, pool, block_tables, cache_len, tokens):
+        """Speculative verify over the block-paged cache.
+
+        Gathers each row's dense view through its block table, runs the
+        ordinary ``verify_step`` (identical numerics), then scatters the
+        T new per-token KV rows back through the tables
+        (``scatter_block_tokens`` — the T positions may cross a block
+        boundary; the scheduler pre-claims every reachable tail block
+        via ``ensure_tail_n`` before calling). Dead rows' tables point
+        at the null block, so their writes land in scratch. Tables,
+        lengths, and acceptance are data: one trace per depth."""
+        bs = pool["k"].shape[2]
+        T = tokens.shape[1]
+        dense = self.paged_view(pool, block_tables)
+        logits, new_dense = self.verify_step(params, dict(dense, len=cache_len), tokens)
+        pos = cache_len[:, None] + jnp.arange(T)[None, :]  # [B, T]
+        bid = jnp.take_along_axis(block_tables, pos // bs, axis=1)
+        off = pos % bs
+        new_pool = {}
+        for name, leaf in pool.items():
+            nd = new_dense[name]  # [L, B, MB·BS, ...]
+            idx = pos.reshape((1,) + pos.shape + (1,) * (nd.ndim - 3))
+            token_rows = jnp.take_along_axis(nd, idx, axis=2)  # [L, B, T, ...]
+            new_pool[name] = attn.scatter_block_tokens(leaf, token_rows, bid, off)
+        return logits, new_pool
+
     def decode_step(self, params, cache, tokens):
         """tokens [B,1] → (logits [B,V], new cache). One new token."""
         cfg, rules = self.cfg, self.rules
@@ -654,15 +764,27 @@ class Model:
         only, which is where the shared-prefix TTFT win comes from.
         (MoE is excluded from prefix *reuse* upstream: dispatch capacity
         depends on tokens-per-call, so suffix routing can drop different
-        tokens than the cold run.)"""
+        tokens than the cold run.)
+
+        int8-KV: ``prefix_k``/``prefix_v`` arrive dequantized (the
+        paged pool's ``gather_prefix`` undoes the per-vector scales) and
+        the returned cache is requantized whole. Unlike the fp
+        families this is *approximate*, not bitwise: suffix queries
+        attend over dequantized prefix K/V (≤1/254 relative error vs
+        the fp rows the cold prefill used), so layer≥2 suffix K/V and
+        the first-token logits carry a quantization-level perturbation
+        — greedy tokens agree unless an argmax near-tie flips. Prefix
+        rows themselves round-trip exactly (quantize∘dequantize is
+        idempotent — the max-|x| element pins each scale) and the
+        scheduler never rewrites the shared blocks anyway
+        (``write_prefill(skip_blocks=)``), so every *subsequent* decode
+        step reads the identical quantized pool either way."""
         cfg, rules = self.cfg, self.rules
         if cfg.family not in PREFIX_FAMILIES:
             raise ValueError(
                 f"prefix prefill is only token-identical for {PREFIX_FAMILIES}, "
                 f"got {cfg.family!r} (MoE capacity routing / VLM patch rows diverge)"
             )
-        if cfg.kv_quant:
-            raise ValueError("prefix prefill does not support the int8 KV cache")
         h = prefix_k.shape[2]
         B, Ssuf = tokens.shape
         x = embed_tokens(params["embed"], tokens, rules)
@@ -684,7 +806,15 @@ class Model:
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
         logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
         cache = self.init_cache(B, max_seq)
-        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
-        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
+        if cfg.kv_quant:
+            kq, ks = attn.quantize_kv(k)
+            vq, vs = attn.quantize_kv(v)
+            for name, val in (("k", kq), ("k_scale", ks), ("v", vq), ("v_scale", vs)):
+                cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[name], val, 0, axis=2
+                )
+        else:
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
         cache["len"] = jnp.full_like(cache["len"], h + Ssuf)
         return logits, cache

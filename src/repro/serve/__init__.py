@@ -4,3 +4,10 @@ from repro.serve.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
 from repro.serve.load import make_requests, make_shared_prefix_requests  # noqa: F401
 from repro.serve.request import Request, ServeStats  # noqa: F401
 from repro.serve.scheduler import Scheduler  # noqa: F401
+from repro.serve.speculative import (  # noqa: F401
+    DraftSource,
+    ModelDraftSource,
+    NGramDraftSource,
+    SpecConfig,
+    advise_depth,
+)

@@ -22,13 +22,19 @@ it *servable*: requests are admitted, decoded, and retired individually
                 plan execution when a plan is set; block-table
                 gather/scatter when paged — live-count, table, and
                 length changes never retrace)
+  speculative.py ``DraftSource`` streams (n-gram prompt-lookup / small
+                draft model), ``SpecConfig``, and ``advise_depth`` —
+                probe-measure a workload, let the
+                ``SpeculationAdvisorTool`` pick K (DESIGN.md §3.2)
   engine.py     this facade: ``serve()`` is the open-loop entry,
                 ``generate()`` the fixed-batch compatibility wrapper,
                 ``decode_region()``/``set_decode_plan()`` the PR 1
                 advisory contract, unchanged. ``kv_layout="paged"``
                 (constructor default or per-call) selects the paged
                 path; the slotted path stays as the differential
-                baseline.
+                baseline. ``spec=SpecConfig(...)`` (constructor default
+                or per-call) turns on speculative decoding — greedy
+                token streams are unchanged by construction.
 """
 from __future__ import annotations
 
@@ -55,6 +61,7 @@ class ServingEngine:
         block_size: int = 8,
         num_blocks: Optional[int] = None,
         prefix_cache: bool = True,
+        spec=None,
     ):
         self.model = model
         self.params = params
@@ -65,13 +72,17 @@ class ServingEngine:
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.prefix_cache = prefix_cache
+        self.spec = spec  # default SpecConfig for serve()/scheduler()
         # engine-owned jitted steps, shared by every scheduler this engine
         # makes: repeated generate()/serve() calls reuse the executables
         self._prefill = jax.jit(lambda p, t, **kw: model.prefill(p, t, max_seq, **kw))
         self._decode = jax.jit(model.decode_step)
-        # paged steps are built lazily: only attention families page
+        # paged/speculative steps are built lazily: only attention
+        # families page, only SPEC_FAMILIES verify
         self._decode_paged = None
         self._prefill_prefix = None
+        self._verify = None
+        self._verify_paged = None
         self._plan_steps: dict = {}  # (plan key, pool size) → jitted plan step
         self._decode_plan = None
         self.stats = ServeStats()
@@ -178,13 +189,27 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     # serving entries
+    def _spec_fns(self, layout: str):
+        if self._verify is None:
+            self._verify = jax.jit(self.model.verify_step)
+        if layout == "paged" and self._verify_paged is None:
+            self._verify_paged = jax.jit(self.model.verify_step_paged)
+        return self._verify, self._verify_paged
+
     def scheduler(
-        self, max_batch: int, *, seed: int = 0, kv_layout: Optional[str] = None
+        self,
+        max_batch: int,
+        *,
+        seed: int = 0,
+        kv_layout: Optional[str] = None,
+        spec=None,
     ) -> Scheduler:
         """A fresh continuous-batching scheduler over ``max_batch`` rows
         (slots, or paged block tables), sharing this engine's stats,
-        jitted steps, and decode plan."""
+        jitted steps, and decode plan. ``spec`` overrides the engine's
+        default ``SpecConfig`` (``SpecConfig(k=0)`` disables)."""
         layout = kv_layout or self.kv_layout
+        spec = spec if spec is not None else self.spec
         paged_kw = {}
         if layout == "paged":
             decode_paged, prefill_prefix = self._paged_fns()
@@ -195,6 +220,9 @@ class ServingEngine:
                 paged_decode_fn=decode_paged,
                 prefix_prefill_fn=prefill_prefix,
             )
+        if spec is not None and spec.k > 0:
+            verify, verify_paged = self._spec_fns(layout)
+            paged_kw.update(verify_fn=verify, paged_verify_fn=verify_paged)
         return Scheduler(
             self.model,
             self.params,
@@ -205,6 +233,7 @@ class ServingEngine:
             stats=self.stats,
             seed=seed,
             kv_layout=layout,
+            spec=spec,
             prefill_fn=self._prefill,
             decode_fn=self._decode,
             plan_step_cache=self._plan_steps,
@@ -218,14 +247,17 @@ class ServingEngine:
         max_batch: Optional[int] = None,
         seed: int = 0,
         kv_layout: Optional[str] = None,
+        spec=None,
     ) -> dict:
         """Continuous-batching entry: drive ``requests`` (each with its
         own arrival time, prompt length, and token budget) to completion
-        through a slotted or block-paged pool. Returns rid → generated
-        tokens."""
+        through a slotted or block-paged pool, optionally speculating
+        ``spec.k`` draft tokens per verify (greedy streams unchanged —
+        ``spec`` usually comes from ``speculative.advise_depth``).
+        Returns rid → generated tokens."""
         requests = list(requests)
         mb = max_batch or self.max_batch or max(1, min(8, len(requests)))
-        return self.scheduler(mb, seed=seed, kv_layout=kv_layout).run(requests)
+        return self.scheduler(mb, seed=seed, kv_layout=kv_layout, spec=spec).run(requests)
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:

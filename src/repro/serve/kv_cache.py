@@ -101,6 +101,26 @@ class SlotKVCache:
         return self.model.read_cache_slot(self.cache, slot)
 
     # ------------------------------------------------------------------
+    # speculative rollback
+    def truncate_row(self, slot: int, n_rejected: int) -> None:
+        """Rewind ``n_rejected`` rejected speculative entries off slot
+        ``slot``: the committed length drops; the stale KV rows past it
+        are masked off by ``len`` and overwritten by later writes, so
+        the values themselves need no cleanup (DESIGN.md §3.2)."""
+        if self._owner[slot] is None:
+            raise RuntimeError(f"truncate of free slot {slot}")
+        new_len = jnp.maximum(self.cache["len"][slot] - int(n_rejected), 0)
+        self.cache["len"] = self.cache["len"].at[slot].set(new_len)
+
+    def truncate_rows(self, n_rejected) -> None:
+        """Vectorized rewind: ``n_rejected`` [max_batch] entries come
+        off every row's length in one update (dead and just-retired
+        rows pass the full verify width, so their lengths return to the
+        pre-verify value and never drift)."""
+        vec = jnp.asarray(np.asarray(n_rejected, np.int32))
+        self.cache["len"] = jnp.maximum(self.cache["len"] - vec, 0)
+
+    # ------------------------------------------------------------------
     def check_invariants(self) -> None:
         """Free slots and live slots partition the pool; the free list is
         sorted and duplicate-free (used by the property tests)."""
@@ -157,10 +177,13 @@ class PagedKVCache:
         )
         cfg = model.cfg
         # PREFIX_FAMILIES lives next to the model's prefill_with_prefix,
-        # which enforces the same exclusions — the two layers can't drift
+        # which enforces the same exclusions — the two layers can't
+        # drift. int8-KV participates: gather_prefix dequantizes hit
+        # blocks for the suffix path, and the suffix prefill requantizes
+        # (idempotently) on the way back.
         self.prefix = (
             PrefixCache(self.block_size)
-            if prefix_cache and cfg.family in PREFIX_FAMILIES and not cfg.kv_quant
+            if prefix_cache and cfg.family in PREFIX_FAMILIES
             else None
         )
         self.allocator = BlockAllocator(
@@ -256,14 +279,23 @@ class PagedKVCache:
     # cache I/O
     def gather_prefix(self, hit_ids: list[int]):
         """(k, v) [L, 1, h, KV, hd] — a hit chain's post-RoPE KV rows,
-        dense, for ``Model.prefill_with_prefix``."""
+        dense, for ``Model.prefill_with_prefix``. int8 pools dequantize
+        here (per-vector scales live beside the values), so the suffix
+        prefill always sees dense K/V whatever the cache dtype."""
         from repro.models import attention as attn
 
         table = jnp.asarray(np.array(hit_ids, np.int32)[None, :])
-        return (
-            attn.gather_block_rows(self.pool["k"], table),
-            attn.gather_block_rows(self.pool["v"], table),
-        )
+        k = attn.gather_block_rows(self.pool["k"], table)
+        v = attn.gather_block_rows(self.pool["v"], table)
+        if self.model.cfg.kv_quant:
+            dt = jnp.dtype(self.model.cfg.dtype)
+            k = attn.dequantize_kv(
+                k, attn.gather_block_rows(self.pool["k_scale"], table), dt
+            )
+            v = attn.dequantize_kv(
+                v, attn.gather_block_rows(self.pool["v_scale"], table), dt
+            )
+        return k, v
 
     def write_prefill(self, row: int, dense_cache, skip_blocks: int = 0) -> None:
         """Install a request's batch=1 dense prefill cache into its fresh
@@ -289,19 +321,57 @@ class PagedKVCache:
     def ensure_tail(self, row: int) -> None:
         """Make sure the row's next decode write position has a physical
         block, claiming one lazily from its reservation if not."""
-        bi = int(self.cache_len[row]) // self.block_size
-        if bi < len(self._row_blocks[row]):
-            return
-        assert bi == len(self._row_blocks[row]) and bi < self.blocks_per_row
-        assert self._row_outstanding[row] > 0, "tail block was not reserved"
-        b = self.allocator.alloc()
-        self._row_blocks[row].append(b)
-        self.block_tables[row, bi] = b
-        self._row_outstanding[row] -= 1
-        self._outstanding_total -= 1
+        self.ensure_tail_n(row, 1)
+
+    def ensure_tail_n(self, row: int, n: int) -> None:
+        """Claim tail blocks so the row's next ``n`` write positions
+        (``cache_len .. cache_len+n-1`` — a speculative verify writes
+        the pending token plus K drafts at once) are all physically
+        backed, drawing lazily on the admission reservation."""
+        need = self.blocks_for(int(self.cache_len[row]) + n)
+        while len(self._row_blocks[row]) < need:
+            bi = len(self._row_blocks[row])
+            assert bi < self.blocks_per_row
+            assert self._row_outstanding[row] > 0, "tail block was not reserved"
+            b = self.allocator.alloc()
+            self._row_blocks[row].append(b)
+            self.block_tables[row, bi] = b
+            self._row_outstanding[row] -= 1
+            self._outstanding_total -= 1
 
     def advance(self, row: int) -> None:
         self.cache_len[row] += 1
+
+    def advance_n(self, row: int, n: int) -> None:
+        """Account ``n`` KV entries written by one verify call (the
+        pending token + K drafts); ``truncate_row`` then rewinds the
+        rejected tail."""
+        self.cache_len[row] += n
+
+    def truncate_row(self, row: int, n_rejected: int) -> None:
+        """Rewind ``n_rejected`` rejected draft entries off the row's
+        tail: the committed length drops, and claimed tail blocks past
+        the new length are un-claimed — returned to the allocator with
+        their worst-case reservation restored, so a later verify can
+        claim them again. Only exclusively-owned, unregistered tail
+        blocks can ever be released: verify writes land strictly past
+        the prompt, so the rewind is bounded above the shared/registered
+        prefix blocks (asserted)."""
+        if self._row_owner[row] is None:
+            raise RuntimeError(f"truncate of free row {row}")
+        new_len = int(self.cache_len[row]) - int(n_rejected)
+        assert new_len >= 0, "truncate below zero"
+        self.cache_len[row] = new_len
+        keep = self.blocks_for(new_len)
+        while len(self._row_blocks[row]) > keep:
+            b = self._row_blocks[row].pop()
+            assert self.allocator.refcount[b] == 1 and (
+                self.prefix is None or not self.prefix.registered(b)
+            ), "truncate reached a shared/registered block"
+            self.allocator.free(b)
+            self.block_tables[row, len(self._row_blocks[row])] = self.null_block
+            self._row_outstanding[row] += 1
+            self._outstanding_total += 1
 
     # ------------------------------------------------------------------
     def free_row(self, row: int) -> None:

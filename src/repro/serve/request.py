@@ -92,6 +92,15 @@ class ServeStats:
     prompt_tokens: int = 0
     prefix_hit_tokens: int = 0
     n_prefix_hits: int = 0
+    # speculative-decode accounting (zero when speculation is off):
+    # per-step latency split (draft stream vs target verify) plus the
+    # proposed/accepted draft-token counters behind the acceptance rate
+    draft_ms: list = field(default_factory=list)
+    verify_ms: list = field(default_factory=list)
+    spec_k: int = 0
+    spec_steps: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     def reset(self) -> None:
         """Start a run from clean series — percentiles never mix runs."""
@@ -102,6 +111,12 @@ class ServeStats:
         self.prompt_tokens = 0
         self.prefix_hit_tokens = 0
         self.n_prefix_hits = 0
+        self.draft_ms.clear()
+        self.verify_ms.clear()
+        self.spec_k = 0
+        self.spec_steps = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
 
     def record(self, req: Request) -> None:
         """Fold a finished request's latencies into the run series."""
@@ -119,6 +134,11 @@ class ServeStats:
     def prefix_hit_rate(self) -> float:
         """Fraction of prompt tokens served from the prefix cache."""
         return self.prefix_hit_tokens / self.prompt_tokens if self.prompt_tokens else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the verify accepted."""
+        return self.spec_accepted / self.spec_proposed if self.spec_proposed else 0.0
 
     def percentile(self, p, series: str = "step_ms") -> float:
         vals = getattr(self, series)
@@ -138,20 +158,47 @@ class ServeStats:
         return s
 
     def serving_summary(self) -> dict:
-        """Machine-readable serving latencies (BENCH_aira.json section)."""
-        return {
+        """Machine-readable serving latencies (BENCH_aira.json section).
+
+        A run where zero requests finished returns an *explicit* empty
+        summary — ``empty=True`` with ``None`` for every per-request
+        percentile — instead of letting empty series masquerade as
+        0 ms latencies (or propagate NaN through downstream ratios).
+        Step timings survive either way: steps are measured per decode,
+        not per retirement."""
+        out = {
             "n_requests": len(self.ttft_ms),
             "n_steps": len(self.step_ms),
-            "p50_ttft_ms": self.percentile(50, "ttft_ms"),
-            "p99_ttft_ms": self.percentile(99, "ttft_ms"),
-            "p50_tpot_ms": self.percentile(50, "tpot_ms"),
-            "p99_tpot_ms": self.percentile(99, "tpot_ms"),
-            "p50_step_ms": self.percentile(50),
-            "p99_step_ms": self.percentile(99),
-            "p50_e2e_ms": self.percentile(50, "e2e_ms"),
-            "p99_e2e_ms": self.percentile(99, "e2e_ms"),
+            "empty": not self.ttft_ms,
+            "p50_step_ms": self.percentile(50) if self.step_ms else None,
+            "p99_step_ms": self.percentile(99) if self.step_ms else None,
             "prompt_tokens": self.prompt_tokens,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_hit_rate": self.prefix_hit_rate,
             "n_prefix_hits": self.n_prefix_hits,
         }
+        if self.ttft_ms:
+            out.update(
+                p50_ttft_ms=self.percentile(50, "ttft_ms"),
+                p99_ttft_ms=self.percentile(99, "ttft_ms"),
+                p50_tpot_ms=self.percentile(50, "tpot_ms") if self.tpot_ms else None,
+                p99_tpot_ms=self.percentile(99, "tpot_ms") if self.tpot_ms else None,
+                p50_e2e_ms=self.percentile(50, "e2e_ms"),
+                p99_e2e_ms=self.percentile(99, "e2e_ms"),
+            )
+        else:
+            out.update(
+                p50_ttft_ms=None, p99_ttft_ms=None, p50_tpot_ms=None,
+                p99_tpot_ms=None, p50_e2e_ms=None, p99_e2e_ms=None,
+            )
+        if self.spec_steps:
+            out["speculative"] = {
+                "k": self.spec_k,
+                "acceptance_rate": self.acceptance_rate,
+                "proposed": self.spec_proposed,
+                "accepted": self.spec_accepted,
+                "spec_steps": self.spec_steps,
+                "p50_draft_ms": self.percentile(50, "draft_ms"),
+                "p50_verify_ms": self.percentile(50, "verify_ms"),
+            }
+        return out

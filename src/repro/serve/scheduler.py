@@ -18,12 +18,22 @@ Each ``step()`` (the serving analogue of one Relic task-queue tick):
   3. samples the next token per live row, retires requests that hit
      their token budget or EOS, and frees their slots/blocks.
 
+With speculation on (``spec=SpecConfig(k>0)``), step 2 becomes ONE
+fused draft→verify round over the same fixed-shape pool: the draft
+stream proposes K tokens per row, a single ``verify_step`` forward
+prices all of them, greedy-equivalence acceptance commits the matched
+prefix plus the corrected token, and the KV pools (target and any
+draft-model pool) rewind the rejected tail via ``truncate_row``.
+Acceptance counts are data, not shape — one verify trace per depth K
+serves every acceptance pattern (DESIGN.md §3.2).
+
 Dead rows still flow through the decode (static shapes); their outputs
 are ignored (plain path), zeroed (masked plan path), or routed to the
 null block (paged writes). Greedy decoding is batch-size independent
 per row, so a half-full continuous batch reproduces the fixed-batch
-baseline token-for-token — and the paged gather/scatter reproduces the
-slotted layout bitwise — the properties the serving tests pin.
+baseline token-for-token — and the paged gather/scatter and the
+speculative draft→verify→rollback round both reproduce the plain
+greedy stream bitwise — the properties the serving tests pin.
 
 Driving is open-loop: ``run()`` injects requests at their
 ``arrival_time`` regardless of completions, which is the honest way to
@@ -58,10 +68,13 @@ class Scheduler:
         block_size: int = 8,
         num_blocks: Optional[int] = None,
         prefix_cache: bool = True,
+        spec=None,
         prefill_fn=None,
         decode_fn=None,
         paged_decode_fn=None,
         prefix_prefill_fn=None,
+        verify_fn=None,
+        paged_verify_fn=None,
         plan_step_cache: Optional[dict] = None,
     ):
         self.model = model
@@ -109,6 +122,34 @@ class Scheduler:
             if kv_layout == "paged"
             else None
         )
+        # speculative decode: a draft stream + the fused verify step
+        self.spec = spec if (spec is not None and spec.k > 0) else None
+        self._drafter = None
+        self._verify = self._verify_paged = None
+        if self.spec is not None:
+            from repro.models.model import SPEC_FAMILIES
+
+            if model.cfg.family not in SPEC_FAMILIES:
+                raise ValueError(
+                    f"speculative decode needs a {SPEC_FAMILIES} family "
+                    f"(rewindable KV cache), got {model.cfg.family!r}"
+                )
+            if self.temperature > 0.0:
+                raise ValueError(
+                    "speculative decode is greedy-equivalence only; "
+                    "serve with temperature=0"
+                )
+            if decode_plan is not None:
+                raise ValueError(
+                    "speculation and decode plans both rewrite the decode "
+                    "step — set one or the other"
+                )
+            self._drafter = self.spec.make_drafter()
+            self._drafter.bind(max_batch, max_seq)
+            self._verify = verify_fn or jax.jit(model.verify_step)
+            self._verify_paged = paged_verify_fn or (
+                jax.jit(model.verify_step_paged) if kv_layout == "paged" else None
+            )
         self._plan_steps = plan_step_cache if plan_step_cache is not None else {}
         self._decode_plan = None
         self._t0: Optional[float] = None
@@ -123,6 +164,11 @@ class Scheduler:
         since request order is externally visible)."""
         if plan is not None and self.kv_layout == "paged":
             raise ValueError("decode plans are not supported on the paged layout")
+        if plan is not None and self.spec is not None:
+            raise ValueError(
+                "speculation and decode plans both rewrite the decode step "
+                "— set one or the other"
+            )
         if plan is not None and plan.key.combine != "stack":
             raise ValueError(
                 "decode plan must preserve per-request order (combine='stack')"
@@ -164,15 +210,28 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     # lifecycle transitions
+    @property
+    def _spec_margin(self) -> int:
+        """Row capacity a speculative verify can transiently overhang:
+        the last verify before a request retires may write K rejected
+        entries past its final committed length."""
+        return self.spec.k if self.spec is not None else 0
+
     def submit(self, req: Request) -> None:
         need = int(jnp.asarray(req.prompt).shape[0]) + req.max_new_tokens
         if req.patch_embeds is not None:
             need += int(jnp.asarray(req.patch_embeds).shape[0])
+        need += self._spec_margin
         if need > self.max_seq:
             # past max_seq the cache write clamps and silently corrupts
             # the newest KV entry — fail loudly at submission instead
+            margin = (
+                f" (incl. speculative margin K={self._spec_margin})"
+                if self._spec_margin
+                else ""
+            )
             raise ValueError(
-                f"request {req.rid}: prompt + max_new_tokens = {need} "
+                f"request {req.rid}: prompt + max_new_tokens = {need}{margin} "
                 f"exceeds the row capacity max_seq={self.max_seq}"
             )
         if self.kv_layout == "paged":
@@ -239,6 +298,8 @@ class Scheduler:
                 req.slot = slot
                 self.kv.write(slot, self.model.read_cache_slot(cache, i))
                 self._start_decode(req, slot, logits[i], now)
+                if self._drafter is not None and not req.finished:
+                    self._drafter.on_admit(slot, req)
 
     def _try_admit_paged(self, req: Request, now: float) -> bool:
         """Paged admission, one request at a time: prefix-match the
@@ -253,7 +314,12 @@ class Scheduler:
             # are not token-addressable — no prefix matching for them
             n_cache += int(jnp.asarray(req.patch_embeds).shape[0])
             tokens = ()
-        got = self.kv.try_admit(req.rid, tokens, req.max_new_tokens, n_tokens=n_cache)
+        # the block budget carries the speculative margin: the rejected
+        # tail of a verify transiently occupies blocks past the final
+        # committed length, and lazy tail claims must never fail
+        got = self.kv.try_admit(
+            req.rid, tokens, req.max_new_tokens + self._spec_margin, n_tokens=n_cache
+        )
         if got is None:
             return False
         row, hit_ids = got
@@ -275,6 +341,8 @@ class Scheduler:
             logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None, :], **kw)
         self.kv.write_prefill(row, cache, skip_blocks=len(hit_ids))
         self._start_decode(req, row, logits[0], now)
+        if self._drafter is not None and not req.finished:
+            self._drafter.on_admit(row, req)
         return True
 
     def _retire(self, req: Request, now: float) -> None:
@@ -315,6 +383,84 @@ class Scheduler:
         self.kv.cache = new_cache
         return logits
 
+    def _spec_step(self) -> None:
+        """One fused draft→verify speculation round over the full pool.
+
+        The draft stream proposes K tokens per row; ONE ``verify_step``
+        forward (fixed [max_batch, K+1] shape — acceptance is data)
+        returns per-position target logits; greedy-equivalence
+        acceptance commits each row's matched draft prefix plus the
+        corrected argmax token, so the emitted stream is token-for-token
+        the plain greedy stream. The KV pools then rewind the rejected
+        tail: slot lengths truncate in one vectorized update, paged rows
+        release their un-needed claimed tail blocks, and a stateful
+        drafter rolls back by the same per-row vector (DESIGN.md §3.2).
+        """
+        K = self.spec.k
+        t_start = time.perf_counter()
+        drafts = self._drafter.propose(self._active, np.asarray(self._tok))
+        t_draft = time.perf_counter()
+        self.stats.draft_ms.append((t_draft - t_start) * 1e3)
+        tokens_in = jnp.concatenate(
+            [self._tok[:, None], jnp.asarray(drafts, jnp.int32)], axis=1
+        )
+        if self.kv_layout == "paged":
+            for row in self._active:
+                self.kv.ensure_tail_n(row, K + 1)
+            logits, new_pool = self._verify_paged(
+                self.params,
+                self.kv.pool,
+                jnp.asarray(self.kv.block_tables),
+                jnp.asarray(self.kv.cache_len),
+                tokens_in,
+            )
+            logits.block_until_ready()
+            self.kv.pool = new_pool
+        else:
+            logits, new_cache = self._verify(self.params, self.kv.cache, tokens_in)
+            logits.block_until_ready()
+            self.kv.cache = new_cache
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))  # [max_batch, K+1]
+        now = time.perf_counter()
+        self.stats.verify_ms.append((now - t_draft) * 1e3)
+        self.stats.step_ms.append((now - t_start) * 1e3)
+        self.stats.spec_k = K
+        self.stats.spec_steps += 1
+
+        # acceptance: commit matched prefix + corrected token, per row
+        rej = np.full((self.kv.max_batch,), K + 1, np.int32)
+        for row, req in list(self._active.items()):
+            d, g = drafts[row], greedy[row]
+            a = 0
+            while a < K and d[a] == g[a]:
+                a += 1
+            self.stats.spec_proposed += K
+            self.stats.spec_accepted += a
+            stream = [int(t) for t in d[:a]] + [int(g[a])]
+            done = False
+            for t in stream:
+                req.tokens.append(t)
+                if len(req.tokens) >= req.max_new_tokens or t == req.eos_id:
+                    done = True
+                    break
+            if done:
+                # budget/EOS mid-stream: the row retires, its junk tail
+                # (and, paged, all its blocks) goes with it
+                self._retire(req, self._clock())
+            else:
+                self._tok = self._tok.at[row].set(stream[-1])
+                # valid new entries: the pending token + a accepted
+                # drafts (the corrected token is pending, not cached)
+                rej[row] = K - a
+                if self.kv_layout == "paged":
+                    self.kv.advance_n(row, K + 1)
+                    self.kv.truncate_row(row, K - a)
+        if self.kv_layout != "paged":
+            # dead/retired rows truncate the full verify width, so their
+            # lengths return to the pre-verify value and never drift
+            self.kv.truncate_rows(rej)
+        self._drafter.rollback(rej)
+
     def step(self, now: Optional[float] = None) -> bool:
         """Admit arrived requests, then run one batched decode over the
         live set. Returns False when there was nothing to do."""
@@ -340,6 +486,9 @@ class Scheduler:
                 admitted = True
         if not self._active:
             return admitted
+        if self.spec is not None:
+            self._spec_step()
+            return True
 
         mask = self.kv.live_mask()
         t0 = time.perf_counter()

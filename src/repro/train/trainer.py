@@ -71,6 +71,10 @@ class Trainer:
         return TrainerState(params=params, opt_state=self.opt.init(params), step=0)
 
     def _maybe_restore(self, state: TrainerState) -> TrainerState:
+        # quiesce any in-flight async save first: an in-process restart
+        # (induced-failure tests, elastic resume) may arrive while the
+        # publish thread is still renaming the newest step dir
+        self.ckpt.wait()
         latest = self.ckpt.latest_step()
         if latest is None:
             return state

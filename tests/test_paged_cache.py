@@ -119,6 +119,74 @@ def test_eviction_under_pressure_takes_leaves_not_chain_roots(served):
     assert survivors == [b for b in survivors if kv.prefix.registered(b)]
 
 
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), block_size=st.integers(1, 4))
+def test_prefix_trie_random_ops_match_reference(seed, block_size):
+    """Under random insert/match/cascade-drop sequences the trie agrees
+    with a brute-force reference (block id → its full key-chain path):
+    match returns exactly the longest registered chain prefix (capped so
+    one suffix token remains), insert registers only the novel tail of
+    a chain, and dropping a block drops precisely its subtree."""
+    rng = random.Random(seed)
+    pc = PrefixCache(block_size)
+    chains: dict[int, tuple] = {}  # block → key-chain path (ref model)
+    next_block = 0
+
+    def ref_match(tokens):
+        keys = [
+            tuple(tokens[j * block_size : (j + 1) * block_size])
+            for j in range((len(tokens) - 1) // block_size)
+        ]
+        out = []
+        by_path = {path: b for b, path in chains.items()}
+        for j in range(len(keys)):
+            b = by_path.get(tuple(keys[: j + 1]))
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    for _ in range(120):
+        op = rng.choice(["insert", "match", "match", "drop"] if chains else ["insert", "match"])
+        tokens = tuple(rng.randrange(4) for _ in range(rng.randint(0, 4 * block_size)))
+        if op == "insert":
+            n_blocks = rng.randint(0, len(tokens) // block_size)
+            keys = [
+                tuple(tokens[j * block_size : (j + 1) * block_size])
+                for j in range(n_blocks)
+            ]
+            by_path = {path: b for b, path in chains.items()}
+            ids = []
+            for j in range(n_blocks):
+                path = tuple(keys[: j + 1])
+                if path in by_path:
+                    ids.append(by_path[path])  # existing chain keeps its block
+                else:
+                    ids.append(next_block)
+                    chains[next_block] = path
+                    by_path[path] = next_block
+                    next_block += 1
+            pc.insert(tokens, ids)
+        elif op == "match":
+            assert pc.match(tokens) == ref_match(tokens)
+        else:
+            b = rng.choice(sorted(chains))
+            bpath = chains[b]
+            dropped = pc.drop_block(b)
+            want = {d for d, p in chains.items() if p[: len(bpath)] == bpath and d != b}
+            assert set(dropped) == want, "cascade != subtree"
+            for d in list(chains):
+                if chains[d][: len(bpath)] == bpath:
+                    del chains[d]
+        assert pc.n_blocks == len(chains)
+        for b in chains:
+            assert pc.registered(b)
+            has_children = any(
+                p[: len(chains[b])] == chains[b] and d != b for d, p in chains.items()
+            )
+            assert pc.is_leaf(b) == (not has_children)
+
+
 def test_prefix_trie_match_insert_drop_cascade():
     """match walks full-block chains only (capped so one suffix token
     remains); dropping an interior block drops its whole subtree."""
@@ -250,8 +318,9 @@ def test_differential_paged_vs_slotted_vs_generate(served, seed):
 
 def test_paged_matches_slotted_with_int8_kv(served):
     """The paged gather/scatter treats every seq-indexed leaf uniformly,
-    so the int8 KV cache (values + scales) pages bit-identically; prefix
-    reuse is disabled for it upstream."""
+    so the int8 KV cache (values + scales) pages bit-identically; with
+    distinct prompts the prefix cache (now live for int8 too) never
+    hits, so reuse cannot perturb this differential."""
     import dataclasses
 
     cfg, _, _, prompts = served
@@ -266,9 +335,44 @@ def test_paged_matches_slotted_with_int8_kv(served):
     ]
     sched = eng.scheduler(2)
     out = sched.run(reqs)
-    assert sched.kv.prefix is None  # int8 KV: no prefix reuse
+    assert sched.kv.prefix is not None  # int8 KV participates in reuse now
+    assert all(r.prefix_hit == 0 for r in reqs)  # …but distinct prompts miss
     for i, r in enumerate(reqs):
         np.testing.assert_array_equal(out[r.rid], np.asarray(base[i]))
+
+
+def test_int8_prefix_reuse_matches_cold_prefill(served):
+    """Shared-prefix reuse on the int8 cache: hit blocks dequantize into
+    the suffix path (a ≤1/254 relative perturbation vs the fp rows the
+    cold run attended — approximate by design, see DESIGN.md §3.1) and
+    the refill requantizes idempotently. On this config the greedy
+    tokens match a cold, reuse-off run of the same int8 engine."""
+    import dataclasses
+
+    cfg, _, _, prompts = served
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    m = Model(qcfg)
+    params, _ = m.init(jax.random.key(0))
+    p1 = np.asarray(prompts[0])  # 16 tokens
+    p2 = np.concatenate([p1[:12], np.asarray(prompts[1, :4])])  # 75% shared
+
+    cold = ServingEngine(
+        m, params, max_seq=64, kv_layout="paged", block_size=4, prefix_cache=False
+    )
+    r = Request(prompt=p1, max_new_tokens=4)
+    cold1 = cold.serve([r], max_batch=2)[r.rid]
+    r = Request(prompt=p2, max_new_tokens=4)
+    cold2 = cold.serve([r], max_batch=2)[r.rid]
+
+    eng = ServingEngine(m, params, max_seq=64, kv_layout="paged", block_size=4)
+    sched = eng.scheduler(2)
+    r1 = Request(prompt=p1, max_new_tokens=4)
+    r2 = Request(prompt=p2, max_new_tokens=4)
+    out = sched.run([r1, r2])
+    sched.kv.check_invariants()
+    assert r1.prefix_hit == 0 and r2.prefix_hit == 12
+    np.testing.assert_array_equal(out[r1.rid], cold1)
+    np.testing.assert_array_equal(out[r2.rid], cold2)
 
 
 def test_paged_eviction_under_block_pressure_stays_correct(served):

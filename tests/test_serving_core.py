@@ -239,6 +239,23 @@ def test_make_requests_handles_budget_of_one():
 # stats lifecycle
 
 
+def test_serving_summary_explicit_when_no_request_finished():
+    """A run where zero requests finish yields an explicit empty
+    summary (empty=True, None latencies) — not 0 ms percentiles over
+    empty series — while step timings, measured per decode, survive."""
+    from repro.serve import ServeStats
+
+    s = ServeStats()
+    out = s.serving_summary()
+    assert out["empty"] and out["n_requests"] == 0
+    assert out["p50_ttft_ms"] is None and out["p99_e2e_ms"] is None
+    assert out["p50_step_ms"] is None  # no steps either
+    s.step_ms.extend([1.0, 2.0])  # steps ran, but nothing retired yet
+    out = s.serving_summary()
+    assert out["empty"] and out["p50_ttft_ms"] is None
+    assert out["p50_step_ms"] == 1.5 and out["n_steps"] == 2
+
+
 def test_stats_reset_per_run(served):
     _, m, params, prompts = served
     eng = ServingEngine(m, params, max_seq=64)

@@ -1,0 +1,439 @@
+"""Speculative decoding subsystem: verify-step semantics, per-row
+rollback (slot lengths, paged tail blocks), greedy token-identity of
+speculative serve vs plain greedy across both drafters × both KV
+layouts × K ∈ {2, 4, 8} on randomized open-loop traces (EOS early
+finish, eviction under block pressure), and the SpeculationAdvisorTool
+gate that picks the depth."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.tools import (
+    SpecMeasurement,
+    SpeculationAdvisorTool,
+    expected_tokens_per_round,
+)
+from repro.models import Model
+from repro.serve import (
+    ModelDraftSource,
+    NGramDraftSource,
+    PagedKVCache,
+    Request,
+    ServingEngine,
+    SlotKVCache,
+    SpecConfig,
+    advise_depth,
+)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params, _ = m.init(jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1), (5, 16), 0, cfg.vocab_size)
+    return cfg, m, params, prompts
+
+
+@pytest.fixture(scope="module")
+def draft(served):
+    """A 1-layer draft model sharing the target's tokenizer space."""
+    cfg, _, _, _ = served
+    dcfg = dataclasses.replace(cfg, num_layers=1, name="draft-smoke")
+    dm = Model(dcfg)
+    dparams, _ = dm.init(jax.random.key(7))
+    return dm, dparams
+
+
+def _trace(prompts, lens, budgets, eos=None, eos_req=None):
+    return [
+        Request(
+            prompt=np.asarray(prompts[i, : lens[i]]),
+            max_new_tokens=int(budgets[i]),
+            arrival_time=0.01 * i,
+            eos_id=eos if i == eos_req else None,
+        )
+        for i in range(len(lens))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# verify step semantics
+
+
+def test_verify_step_reproduces_sequential_decode(served):
+    """One fixed-K verify forward over the greedy stream returns, at
+    every position, the argmax the sequential decode would produce —
+    the invariant greedy-equivalence acceptance rests on."""
+    _, m, params, prompts = served
+    logits0, cache = jax.jit(lambda p, t: m.prefill(p, t, 32))(params, prompts[:2, :8])
+    # roll the greedy stream with plain decode steps
+    decode = jax.jit(m.decode_step)
+    toks = [jnp.argmax(logits0, axis=-1)]
+    dcache = cache
+    for _ in range(4):
+        lg, dcache = decode(params, dcache, toks[-1][:, None])
+        toks.append(jnp.argmax(lg, axis=-1))
+    stream = jnp.stack(toks, axis=1)  # [B, 5]: tok0 .. tok4
+    # one verify over [tok0..tok3] must predict [tok1..tok4]
+    vlogits, vcache = jax.jit(m.verify_step)(params, cache, stream[:, :4])
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(vlogits, axis=-1)), np.asarray(stream[:, 1:5])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(vcache["len"]), np.asarray(cache["len"]) + 4
+    )
+
+
+def test_verify_step_rejects_unrewindable_families():
+    ssm = Model(get_config("mamba2-370m").reduced())
+    with pytest.raises(ValueError, match="greedy-equivalent"):
+        ssm.verify_step(None, None, None)
+    moe = Model(get_config("granite-moe-1b-a400m").reduced())
+    with pytest.raises(ValueError, match="greedy-equivalent"):
+        moe.verify_step(None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# rollback
+
+
+def test_slot_truncate_row_rewinds_length(served):
+    _, m, _, _ = served
+    kv = SlotKVCache(m, max_batch=2, max_seq=16)
+    slot = kv.alloc(0)
+    kv.cache["len"] = kv.cache["len"].at[slot].set(9)
+    kv.truncate_row(slot, 3)
+    assert int(kv.cache["len"][slot]) == 6
+    kv.truncate_rows(np.array([2, 5]))  # dead row clamps at zero
+    assert int(kv.cache["len"][slot]) == 4
+    assert int(kv.cache["len"][1 - slot]) == 0
+    kv.free(slot)
+    with pytest.raises(RuntimeError, match="truncate of free slot"):
+        kv.truncate_row(slot, 1)
+
+
+def test_paged_truncate_row_releases_tail_blocks(served):
+    """A verify's rejected tail releases its claimed blocks back to the
+    pool with the reservation restored; shared prefix blocks stay."""
+    _, m, _, _ = served
+    kv = PagedKVCache(m, max_batch=2, max_seq=32, block_size=4)
+    row, _ = kv.try_admit(0, tuple(range(8)), budget=12)
+    free0 = kv.allocator.n_free
+    out0 = kv._row_outstanding[row]
+    kv.ensure_tail_n(row, 5)  # positions 8..12 → claims 2 tail blocks
+    assert kv.allocator.n_free == free0 - 2
+    kv.advance_n(row, 5)
+    kv.truncate_row(row, 4)  # keep 1 of the 5: back into block 2
+    assert int(kv.cache_len[row]) == 9
+    assert kv.allocator.n_free == free0 - 1  # one tail block released
+    assert kv._row_outstanding[row] == out0 - 1
+    kv.check_invariants()
+    # a second request aliasing the prompt prefix: its rollback can
+    # never release the shared blocks (they sit below the prompt)
+    row2, hits = kv.try_admit(1, tuple(range(8)) + (99,), budget=4)
+    assert len(hits) == 2
+    kv.ensure_tail_n(row2, 3)
+    kv.advance_n(row2, 3)
+    kv.truncate_row(row2, 3)
+    assert all(kv.allocator.refcount[b] == 2 for b in hits)
+    kv.check_invariants()
+    kv.free_row(row2)
+    with pytest.raises(RuntimeError, match="truncate of free row"):
+        kv.truncate_row(row2, 1)
+
+
+# ---------------------------------------------------------------------------
+# differential: speculative serve == plain greedy serve, token for token
+
+
+def _baselines(m, params, prompts, lens, budgets):
+    eng = ServingEngine(m, params, max_seq=64)
+    bases = [
+        np.asarray(
+            eng.generate(prompts[i : i + 1, : lens[i]], n_steps=int(budgets[i]))[0]
+        )
+        for i in range(len(lens))
+    ]
+    return bases
+
+
+@pytest.mark.parametrize("kv_layout", ["slot", "paged"])
+@pytest.mark.parametrize("drafter", ["ngram", "model"])
+def test_speculative_serve_token_identical_to_greedy(served, draft, kv_layout, drafter):
+    """Both drafters × both KV layouts × K ∈ {2,4,8}: a randomized
+    open-loop trace (staggered arrivals, divergent prompt lengths and
+    budgets, one EOS early finish) decodes token-for-token identical to
+    the plain greedy baseline, with the KV invariants intact."""
+    _, m, params, prompts = served
+    dm, dparams = draft
+    rng = np.random.default_rng(1)
+    n = 4
+    lens = rng.integers(3, 16, size=n)
+    budgets = rng.integers(2, 8, size=n)
+    bases = _baselines(m, params, prompts, lens, budgets)
+    eos = int(bases[0][min(1, int(budgets[0]) - 1)])
+    cut = int(np.argmax(bases[0] == eos))
+    expected = [b if i != 0 else b[: cut + 1] for i, b in enumerate(bases)]
+
+    spec_kw = (
+        dict(drafter="ngram")
+        if drafter == "ngram"
+        else dict(drafter="model", draft_model=dm, draft_params=dparams)
+    )
+    eng = ServingEngine(m, params, max_seq=64, kv_layout=kv_layout, block_size=4)
+    for k in (2, 4, 8):
+        reqs = _trace(prompts, lens, budgets, eos, 0)
+        sched = eng.scheduler(3, spec=SpecConfig(k=k, **spec_kw))
+        out = sched.run(reqs)
+        sched.kv.check_invariants()
+        for i, req in enumerate(reqs):
+            np.testing.assert_array_equal(
+                out[req.rid], expected[i], err_msg=f"K={k} req {i}"
+            )
+            assert req.finished
+        s = eng.stats.serving_summary()["speculative"]
+        assert s["k"] == k and s["proposed"] > 0
+        assert 0.0 <= s["acceptance_rate"] <= 1.0
+
+
+def test_speculative_paged_eviction_under_pressure(served):
+    """Speculation on a block-starved paged pool: margin reservations,
+    lazy tail claims, rollback releases, and LRU eviction of cached
+    prompt blocks all interleave — outputs still match the baselines."""
+    _, m, params, prompts = served
+    lens, budgets = (12, 8, 14), (4, 6, 3)
+    bases = [
+        np.asarray(
+            ServingEngine(m, params, max_seq=64).generate(
+                prompts[i : i + 1, : lens[i]], n_steps=budgets[i]
+            )[0]
+        )
+        for i in range(3)
+    ]
+    eng = ServingEngine(
+        m, params, max_seq=64, kv_layout="paged", block_size=4, num_blocks=8
+    )
+    reqs = _trace(prompts, lens, budgets)
+    sched = eng.scheduler(2, spec=SpecConfig(k=4))
+    out = sched.run(reqs)
+    sched.kv.check_invariants()
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(out[r.rid], bases[i])
+
+
+def test_self_draft_reaches_full_acceptance(served):
+    """Draft model == target model ⇒ every proposal survives the verify
+    (acceptance 1.0) and the stream is still exactly the greedy one —
+    the strongest end-to-end check of draft-cache/target-cache lockstep
+    (propose, catch-up step, and rollback)."""
+    _, m, params, prompts = served
+    base = np.asarray(ServingEngine(m, params, max_seq=64).generate(prompts[:2, :8], 6))
+    eng = ServingEngine(m, params, max_seq=64)
+    reqs = [Request(prompt=np.asarray(prompts[i, :8]), max_new_tokens=6) for i in range(2)]
+    out = eng.serve(
+        reqs, max_batch=2, spec=SpecConfig(k=4, drafter="model", draft_model=m, draft_params=params)
+    )
+    assert eng.stats.acceptance_rate == 1.0
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(out[r.rid], base[i])
+
+
+# ---------------------------------------------------------------------------
+# guards
+
+
+def test_spec_guards(served):
+    _, m, params, _ = served
+    with pytest.raises(ValueError, match="temperature"):
+        ServingEngine(m, params, max_seq=32, temperature=0.7).scheduler(
+            2, spec=SpecConfig(k=4)
+        )
+    ssm = Model(get_config("mamba2-370m").reduced())
+    sp, _ = ssm.init(jax.random.key(0))
+    with pytest.raises(ValueError, match="rewindable"):
+        ServingEngine(ssm, sp, max_seq=32).scheduler(2, spec=SpecConfig(k=4))
+    with pytest.raises(ValueError, match="draft_model"):
+        SpecConfig(k=4, drafter="model").make_drafter()
+    from repro.core.plan import plan_for
+
+    eng = ServingEngine(m, params, max_seq=32)
+    plan = plan_for("spec-no-plan", lambda x: x, jnp.arange(4.0), granularity=1)
+    eng.set_decode_plan(plan)
+    with pytest.raises(ValueError, match="decode plans"):
+        eng.scheduler(2, spec=SpecConfig(k=4))
+    # ...and the late path: arming a plan on a spec scheduler must fail
+    # loudly too, not silently never execute it
+    eng2 = ServingEngine(m, params, max_seq=32)
+    sched = eng2.scheduler(2, spec=SpecConfig(k=4))
+    with pytest.raises(ValueError, match="decode plans"):
+        sched.set_decode_plan(plan)
+
+
+def test_submit_enforces_speculative_margin(served):
+    """prompt + budget + K must fit the row: the rejected tail of the
+    last verify transiently occupies K entries past the final length."""
+    _, m, params, _ = served
+    eng = ServingEngine(m, params, max_seq=16)
+    req = Request(prompt=jnp.ones((8,), jnp.int32), max_new_tokens=6)
+    with pytest.raises(ValueError, match="speculative margin"):
+        eng.serve([req], max_batch=1, spec=SpecConfig(k=4))
+    # the same request is fine without speculation
+    out = eng.serve([Request(prompt=jnp.ones((8,), jnp.int32), max_new_tokens=6)], max_batch=1)
+    assert len(next(iter(out.values()))) == 6
+
+
+# ---------------------------------------------------------------------------
+# drafters
+
+
+def test_ngram_lookup_proposes_continuation():
+    d = NGramDraftSource(k=4, ngram=(3, 2, 1))
+    d.bind(max_batch=1, max_seq=64)
+    # history ends in (1, 2) seen earlier, followed by 3, 4, ...
+    hist = np.array([9, 1, 2, 3, 4, 5, 1, 2], np.int32)
+    np.testing.assert_array_equal(d._lookup(hist), [3, 4, 5, 1])
+    # a loop near the end cycle-extends: ... 7 8 7 8 → 7 8 7 8
+    hist = np.array([5, 7, 8, 7, 8], np.int32)
+    np.testing.assert_array_equal(d._lookup(hist), [7, 8, 7, 8])
+    # no match anywhere → repeat the last token
+    hist = np.array([3, 1, 4], np.int32)
+    np.testing.assert_array_equal(d._lookup(hist), [4, 4, 4, 4])
+
+
+# ---------------------------------------------------------------------------
+# the advisory gate
+
+
+def test_expected_tokens_per_round():
+    assert expected_tokens_per_round(0.0, 4) == 1.0
+    assert expected_tokens_per_round(1.0, 4) == 5.0
+    assert expected_tokens_per_round(0.5, 2) == pytest.approx(1.75)
+
+
+def test_advisor_picks_depth_by_expected_latency():
+    tool = SpeculationAdvisorTool()
+    # free drafts + high acceptance → speculate deep
+    m = SpecMeasurement(
+        draft_ms_per_token=0.0, verify_ms={0: 10.0, 8: 12.0}, acceptance_rate=0.9
+    )
+    k, gain, log = tool.choose(m)
+    assert k == 8 and gain > 1.0 and "K=8" in log
+    # zero acceptance → never speculate (every round still pays verify)
+    m = SpecMeasurement(
+        draft_ms_per_token=0.0, verify_ms={0: 10.0, 8: 12.0}, acceptance_rate=0.0
+    )
+    assert tool.choose(m)[0] == 0
+    # drafts as expensive as the target → the gate declines
+    m = SpecMeasurement(
+        draft_ms_per_token=10.0, verify_ms={0: 10.0, 8: 12.0}, acceptance_rate=0.6
+    )
+    assert tool.choose(m)[0] == 0
+    # moderate acceptance, cheap drafts: shallow beats deep (rejected
+    # tails waste draft work at K=8)
+    m = SpecMeasurement(
+        draft_ms_per_token=0.5, verify_ms={0: 10.0, 8: 11.0}, acceptance_rate=0.5
+    )
+    k, gain, _ = tool.choose(m)
+    assert k in (2, 4) and gain > 0.02
+    # interpolated verify cost between measured depths
+    assert m.verify_cost(4) == pytest.approx(10.5)
+    assert m.verify_cost(0) == 10.0
+
+
+def test_advisor_tool_is_silent_for_compute_regions(served):
+    """As a pipeline stage the tool SKIPs (no stage-log line) unless a
+    region carries a speculation measurement — compute-region advice,
+    and the golden decisions, are untouched."""
+    from repro.core import Aira, Workload
+    from repro.core.adviser import Region
+    from repro.core.overlap_model import CPU_HW
+
+    def region(name):
+        # chain-heavy VPU microtask, comfortably inside the smt2 band
+        return Region(
+            name, lambda x: x * 2.0, jnp.arange(1024, dtype=jnp.float32),
+            task_flops=100.0, task_bytes=512.0, task_chain=16,
+        )
+
+    r1 = region("plain")
+    d = Aira(hw=CPU_HW).advise(Workload("w", lambda: None, [r1])).decisions[0]
+    assert d.accepted  # the pipeline reached (and silently skipped) speculate
+    assert not any("speculate" in line for line in d.stage_log)
+
+    r2 = region("spec")
+    r2.spec_measurement = SpecMeasurement(
+        draft_ms_per_token=0.0, verify_ms={0: 10.0, 8: 12.0}, acceptance_rate=0.9
+    )
+    d2 = Aira(hw=CPU_HW).advise(Workload("w", lambda: None, [r2])).decisions[0]
+    assert any(line.startswith("speculate:") and "K=8" in line for line in d2.stage_log)
+
+
+def test_advise_depth_end_to_end(served):
+    """Probe-measure a self-repetitive workload and honor the decision:
+    advise_depth returns a SpecConfig from the candidate set and
+    serve(spec=...) runs it with the greedy stream unchanged."""
+    _, m, params, prompts = served
+
+    def workload():
+        return [
+            Request(prompt=np.asarray(prompts[i, :6]), max_new_tokens=10)
+            for i in range(2)
+        ]
+
+    eng = ServingEngine(m, params, max_seq=64)
+    base = eng.serve(workload(), max_batch=2)
+    base_tok = [v for _, v in sorted(base.items())]
+    spec, meas, log = advise_depth(eng, workload, ks=(0, 2, 4), max_batch=2)
+    assert spec.k in (0, 2, 4)
+    assert 0.0 <= meas.acceptance_rate <= 1.0
+    assert "K=" in log
+    out = eng.serve(workload(), max_batch=2, spec=spec)
+    for a, b in zip(base_tok, [v for _, v in sorted(out.items())]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_serving_spec_stages_resolve():
+    """Every SERVING_SPEC stage's tool path names a real symbol — the
+    stage table cannot silently drift from the code it describes (the
+    same contract the AIRA_SPEC name test pins for the compute
+    pipeline)."""
+    import importlib
+
+    from repro.core.spec import SERVING_SPEC
+
+    assert [s.name for s in SERVING_SPEC] == [
+        "draft", "verify", "rollback", "speculate",
+    ]
+    for stage in SERVING_SPEC:
+        parts = stage.tool.split(".")
+        obj, i = None, len(parts)
+        while i > 0:  # longest importable module prefix, then attrs
+            try:
+                obj = importlib.import_module("repro." + ".".join(parts[:i]))
+                break
+            except ImportError:
+                i -= 1
+        assert obj is not None, stage.tool
+        for attr in parts[i:]:
+            obj = getattr(obj, attr)  # raises if the path drifted
+
+
+def test_stats_spec_accounting_resets(served):
+    _, m, params, prompts = served
+    eng = ServingEngine(m, params, max_seq=64)
+    eng.serve(
+        [Request(prompt=np.asarray(prompts[0, :8]), max_new_tokens=5)],
+        max_batch=1, spec=SpecConfig(k=2),
+    )
+    assert eng.stats.spec_steps > 0 and eng.stats.spec_proposed > 0
+    assert len(eng.stats.draft_ms) == eng.stats.spec_steps
+    assert len(eng.stats.verify_ms) == eng.stats.spec_steps
+    eng.stats.reset()
+    assert eng.stats.spec_steps == 0 and eng.stats.spec_proposed == 0
+    assert not eng.stats.draft_ms and not eng.stats.verify_ms
+    assert "speculative" not in eng.stats.serving_summary()
