@@ -53,8 +53,11 @@ def write_summary(rows, gm_pos, gm_all, ubench_us, serving=None, path="BENCH_air
     calibrated overlap model; µbench is measured CPU wall-clock;
     ``serving`` is the open-loop load test's p50/p99 TTFT + per-token
     latency from benchmarks/serving_load.py, including the
-    ``shared_prefix`` reuse-on/off comparison on the paged engine and
-    the ``speculative`` K-sweep vs the K=0 greedy baseline)."""
+    ``shared_prefix`` reuse-on/off comparison on the paged engine, the
+    ``speculative`` K-sweep vs the K=0 greedy baseline, and the
+    ``attention_backend`` sweep — p50 TPOT and per-step attention time
+    per (KV layout × backend) plus the KernelAdvisorTool's measured
+    backend decision)."""
     summary = {
         "benchmarks": [
             {
@@ -100,6 +103,11 @@ def main() -> None:
     # likewise un-reduced: the K-sweep's token-identity and nonzero-
     # acceptance asserts are the tracked speculative-decode contract
     serving["speculative"] = serving_load.run_speculative()
+    print()
+    # attention-backend sweep: reference vs the block-paged kernel (in
+    # interpret mode on CPU CI), token-identity asserted per layout,
+    # advised backend from the measured per-step cost (DESIGN.md §4)
+    serving["attention_backend"] = serving_load.run_backend_sweep()
     write_summary(rows, gm_pos, gm_all, ubench_us, serving=serving)
 
 

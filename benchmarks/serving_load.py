@@ -23,6 +23,17 @@ the two runs decode token-identically, and asserts a nonzero hit rate
 (the CI smoke contract). A mid-size config is used so prefill compute —
 the cost reuse removes — dominates per-call dispatch overhead.
 
+The backend mode (``run_backend_sweep`` / ``--backend``) serves an
+identical open-loop workload on BOTH KV layouts through each attention
+backend (DESIGN.md §4): it asserts token-identity against the
+``reference`` backend per layout (the CI interpret-mode kernel smoke
+contract — the real kernel code runs on CPU), reports p50 TPOT and
+per-decode-step latency per (layout × backend), microbenches the
+attention call itself (block-paged kernel vs the dense-gather
+reference) at a serving-representative shape, and feeds the measured
+per-step costs to the ``KernelAdvisorTool`` so the advised backend per
+(family, layout, K) cell lands in the summary — measured, not assumed.
+
 Feeds the ``serving`` section of ``BENCH_aira.json`` (benchmarks/run.py)
 so serving latency is tracked across PRs. Request generation lives in
 ``repro.serve.load`` (shared with examples/serve_decode.py).
@@ -45,6 +56,8 @@ def run(
     max_batch: int = 4,
     tokens: int = 8,
     seed: int = 0,
+    kv_layout: str = "slot",
+    backend: str = "auto",
     print_fn=print,
 ) -> dict:
     from repro.configs import get_config
@@ -55,7 +68,9 @@ def run(
     cfg = get_config(arch).reduced()
     model = Model(cfg)
     params, _ = model.init(jax.random.key(seed))
-    engine = ServingEngine(model, params, max_seq=64)
+    engine = ServingEngine(
+        model, params, max_seq=64, kv_layout=kv_layout, attention_backend=backend
+    )
     rng = np.random.default_rng(seed)
     reqs = make_requests(
         n_requests, rate_rps, vocab=cfg.vocab_size, max_new_tokens=tokens, rng=rng
@@ -69,16 +84,154 @@ def run(
         arch=arch,
         rate_rps=rate_rps,
         max_batch=max_batch,
+        kv_layout=kv_layout,
+        # scalar key is `backend`: `attention_backend` is the sweep
+        # section run.py records beside this summary
+        backend=engine.attention_backend,
     )
     print_fn("# serving — open-loop Poisson arrivals (continuous batching)")
     print_fn(
-        f"arch={arch} requests={n_requests} rate={rate_rps}/s pool={max_batch}"
+        f"arch={arch} requests={n_requests} rate={rate_rps}/s pool={max_batch} "
+        f"layout={kv_layout} backend={engine.attention_backend}"
     )
     print_fn(
         f"ttft p50={summary['p50_ttft_ms']:.2f}ms p99={summary['p99_ttft_ms']:.2f}ms | "
         f"tpot p50={summary['p50_tpot_ms']:.2f}ms p99={summary['p99_tpot_ms']:.2f}ms | "
         f"step p50={summary['p50_step_ms']:.2f}ms p99={summary['p99_step_ms']:.2f}ms"
     )
+    return summary
+
+
+def _attention_microbench(backends, reps: int = 20, seed: int = 0) -> dict:
+    """Per-call attention-step wall-clock at a serving-representative
+    paged shape: the block-table-walking kernel vs the dense-gather
+    reference, isolated from the rest of the decode step. Returns
+    backend → µs/call."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    B, T, KV, g, hd, NB, BS, MB = 4, 1, 2, 2, 32, 64, 16, 8
+    q = jnp.asarray(rng.normal(size=(B, T, KV * g, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(NB, BS, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(NB, BS, KV, hd)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, NB, size=(B, MB)), jnp.int32)
+    lens = jnp.asarray(rng.integers(BS, MB * BS - 1, size=(B,)), jnp.int32)
+    out = {}
+    for backend in backends:
+        f = lambda: ops.paged_attention(q, kp, vp, tbl, lens, mode=backend)
+        jax.block_until_ready(f())  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(f())
+        out[backend] = (time.perf_counter() - t0) / reps * 1e6
+    return out
+
+
+def run_backend_sweep(
+    *,
+    arch: str = "smollm-135m",
+    n_requests: int = 6,
+    rate_rps: float = 50.0,
+    max_batch: int = 3,
+    tokens: int = 8,
+    backends=("reference", "interpret"),
+    seed: int = 0,
+    print_fn=print,
+) -> dict:
+    """Identical open-loop workload on both KV layouts through each
+    attention backend: token-identity vs ``reference`` asserted per
+    layout (the CI kernel-smoke contract — interpret mode runs the real
+    block-paged kernel code on CPU), p50 TPOT / per-step latency
+    recorded per (layout × backend), and the measured per-step costs
+    fed to the ``KernelAdvisorTool`` for the advised backend per cell."""
+    from repro.configs import get_config
+    from repro.core.tools import KernelAdvisorTool, KernelMeasurement
+    from repro.models import Model
+    from repro.serve import ServingEngine
+    from repro.serve.load import make_requests
+
+    # reference leads (it is the identity baseline); dedupe so
+    # --backend reference degrades to a plain reference run, not a
+    # vacuous self-comparison
+    backends = tuple(dict.fromkeys(("reference",) + tuple(backends)))
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params, _ = model.init(jax.random.key(seed))
+    engine = ServingEngine(model, params, max_seq=64, block_size=8)
+
+    def workload():
+        return make_requests(
+            n_requests, rate_rps, vocab=cfg.vocab_size, max_new_tokens=tokens,
+            rng=np.random.default_rng(seed),
+        )
+
+    results: dict = {}
+    for layout in ("slot", "paged"):
+        results[layout] = {}
+        outputs = {}
+        for backend in backends:
+            reqs = workload()  # warm the jit cache outside the window
+            engine.serve(reqs, max_batch=max_batch, seed=seed,
+                         kv_layout=layout, attention_backend=backend)
+            reqs = workload()
+            out = engine.serve(reqs, max_batch=max_batch, seed=seed,
+                               kv_layout=layout, attention_backend=backend)
+            outputs[backend] = [np.asarray(out[r.rid]) for r in reqs]
+            s = engine.stats.serving_summary()
+            results[layout][backend] = {
+                "p50_tpot_ms": s["p50_tpot_ms"],
+                "p50_step_ms": s["p50_step_ms"],
+                "p99_step_ms": s["p99_step_ms"],
+            }
+        for backend in backends[1:]:
+            for a, b in zip(outputs["reference"], outputs[backend]):
+                np.testing.assert_array_equal(
+                    a, b,
+                    err_msg=f"{layout}/{backend} diverged from the reference backend",
+                )
+
+    attn_us = _attention_microbench(backends, seed=seed)
+
+    # the advisory gate prices the measured per-step cost per cell —
+    # the engine honors the decision via serve(attention_backend=...)
+    tool = KernelAdvisorTool()
+    advised, advisor_log = {}, []
+    for layout in ("slot", "paged"):
+        m = KernelMeasurement.make(
+            cfg.family, layout, 0,
+            {b: results[layout][b]["p50_step_ms"] for b in backends},
+        )
+        choice, gain, log = tool.choose(m)
+        advised[layout] = choice
+        advisor_log.append(log)
+
+    summary = {
+        "arch": arch,
+        "backends": list(backends),
+        "slot": results["slot"],
+        "paged": results["paged"],
+        "attn_us": attn_us,
+        "advised": advised,
+    }
+    print_fn("# serving — attention-backend sweep (token-identity asserted)")
+    print_fn(f"arch={arch} requests={n_requests} tokens={tokens} pool={max_batch}")
+    for layout in ("slot", "paged"):
+        for backend in backends:
+            r = results[layout][backend]
+            print_fn(
+                f"{layout:5s}/{backend:9s} tpot p50={r['p50_tpot_ms']:.2f}ms "
+                f"step p50={r['p50_step_ms']:.2f}ms"
+            )
+    print_fn(
+        "attention µbench: "
+        + " ".join(f"{b}={us:.0f}µs" for b, us in attn_us.items())
+    )
+    for line in advisor_log:
+        print_fn(f"advisor: {line}")
     return summary
 
 
@@ -289,10 +442,17 @@ if __name__ == "__main__":
                     help="shared-prefix reuse mode (paged engine, on vs off)")
     ap.add_argument("--speculative", action="store_true",
                     help="speculative-decode mode (n-gram drafter, K sweep vs K=0)")
+    ap.add_argument("--backend", metavar="NAME", default=None,
+                    choices=("reference", "kernel", "interpret"),
+                    help="attention-backend mode: serve both KV layouts through "
+                         "NAME and the reference backend, asserting token "
+                         "identity (CI kernel smoke: --backend interpret)")
     args = ap.parse_args()
     if args.shared_prefix:
         run_shared_prefix()
     elif args.speculative:
         run_speculative()
+    elif args.backend:
+        run_backend_sweep(backends=("reference", args.backend))
     else:
         run()

@@ -20,9 +20,17 @@ decode step as a Region, advises it, and routes decoding through the
 accepted RegionPlan — masked over the active slots in open-loop mode;
 slotted layout only, and mutually exclusive with ``--spec``).
 
+``--backend`` picks the decode/verify attention backend (DESIGN.md §4):
+``reference`` is the pure-jnp path (paged decode gathers a dense view),
+``kernel`` the block-paged Pallas kernel compiled for TPU (attention
+walks the block tables — no dense gather), ``interpret`` the same
+kernel code interpreted on CPU (token-identical by the CI differential
+contract), and ``auto`` (default) resolves per platform via the ops
+registry (``REPRO_ATTENTION_BACKEND`` overrides).
+
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
       [--int8-kv] [--paged] [--spec 4] [--tokens 32] [--batch 4]
-      [--aira] [--open-loop 8] [--rate 20]
+      [--aira] [--open-loop 8] [--rate 20] [--backend interpret]
 """
 import argparse
 import dataclasses
@@ -47,6 +55,11 @@ def main():
     ap.add_argument("--spec", type=int, default=0, metavar="K",
                     help="speculative decoding: K n-gram draft tokens per verify "
                          "(0 = off; token streams stay exactly greedy)")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "reference", "kernel", "interpret"),
+                    help="decode/verify attention backend (DESIGN.md §4): "
+                         "the block-paged Pallas kernel ('kernel'/'interpret') "
+                         "or the pure-jnp reference path")
     ap.add_argument("--aira", action="store_true",
                     help="advise the decode step and serve through its RegionPlan")
     ap.add_argument("--open-loop", type=int, default=0, metavar="N",
@@ -68,6 +81,7 @@ def main():
         model, params, max_seq=256,
         kv_layout="paged" if args.paged else "slot",
         spec=SpecConfig(k=args.spec, drafter="ngram") if args.spec else None,
+        attention_backend=args.backend,
     )
 
     prompts = jax.random.randint(jax.random.key(1), (args.batch, 16), 0, cfg.vocab_size)
@@ -85,7 +99,7 @@ def main():
 
     print(
         f"arch={args.arch} int8_kv={args.int8_kv} paged={args.paged} "
-        f"spec_k={args.spec} aira={args.aira}"
+        f"spec_k={args.spec} aira={args.aira} backend={engine.attention_backend}"
     )
     if args.open_loop > 0:
         from repro.serve.load import make_requests

@@ -290,6 +290,82 @@ class SpeculationAdvisorTool:
         return StageResult(self.name, PASS, log, payload=k)
 
 
+@dataclass(frozen=True)
+class KernelMeasurement:
+    """Measured attention-step cost for one serving cell — what the
+    kernel-backend gate prices, as ``SpecMeasurement`` is to the
+    speculation gate.
+
+    ``family``/``layout``/``k`` name the cell (model family, KV layout
+    ``"slot" | "paged"``, speculation depth with 0 = plain decode);
+    ``step_ms`` maps backend name → measured per-step wall-clock for
+    that cell. A ``"reference"`` entry is required — it is the baseline
+    the predicted gain is quoted against."""
+
+    family: str
+    layout: str
+    k: int
+    step_ms: tuple  # ((backend, ms), ...) — hashable, dict-constructed
+
+    @staticmethod
+    def make(family: str, layout: str, k: int, step_ms: dict) -> "KernelMeasurement":
+        if "reference" not in step_ms:
+            raise ValueError("KernelMeasurement needs a 'reference' baseline timing")
+        return KernelMeasurement(family, layout, int(k), tuple(sorted(step_ms.items())))
+
+    @property
+    def timings(self) -> dict:
+        return dict(self.step_ms)
+
+
+class KernelAdvisorTool:
+    """Backend gate for the decode/verify attention step: pick the
+    attention backend per (family, layout, K) cell from *measured*
+    per-step cost, the same commit-only-on-predicted-win rule as
+    ``OverlapSimTool`` — ``"reference"`` (don't switch) unless a kernel
+    backend's measured gain clears the threshold. Measured, not
+    assumed: on a host where the interpreted kernel is slower than the
+    jnp reference the gate says reference, and on TPU the compiled
+    kernel has to *show* its dense-gather savings to be chosen.
+
+    As a pipeline stage it reports only for regions carrying a
+    ``kernel_measurement`` (compute regions silently SKIP, so the
+    advisory stage log — and the golden decisions — are unchanged);
+    ``benchmarks/serving_load.run_backend_sweep`` is the measuring
+    front end and ``engine.serve(attention_backend=...)`` honors the
+    decision (DESIGN.md §4)."""
+
+    name = "kernel"
+
+    def choose(self, m: KernelMeasurement, threshold: float = 0.02):
+        """(chosen backend, predicted gain, log line) for cell ``m``."""
+        t = m.timings
+        base = float(t["reference"])
+        best, best_ms = "reference", base
+        for backend, ms in sorted(t.items()):
+            if backend != "reference" and float(ms) < best_ms:
+                best, best_ms = backend, float(ms)
+        gain = (base / best_ms - 1.0) if best_ms > 0 else 0.0
+        if gain <= threshold:
+            best, best_ms, gain = "reference", base, 0.0
+        timings = " ".join(f"{b}={float(ms):.2f}ms" for b, ms in sorted(t.items()))
+        log = (
+            f"{m.family}/{m.layout}/K={m.k}: {timings} → {best} "
+            f"({best_ms:.2f}ms/step, {gain:+.1%})"
+        )
+        return best, gain, log
+
+    def run(self, region, ctx: ToolContext) -> StageResult:
+        m = ctx.artifacts.get(
+            "kernel_measurement", getattr(region, "kernel_measurement", None)
+        )
+        if m is None:
+            return StageResult(self.name, SKIP)
+        backend, gain, log = self.choose(m, ctx.gate_threshold)
+        ctx.artifacts["attention_backend"] = backend
+        return StageResult(self.name, PASS, log, payload=backend)
+
+
 DEFAULT_TOOLS: tuple = (
     ProfileTool(),
     StaticDepsTool(),
@@ -297,6 +373,7 @@ DEFAULT_TOOLS: tuple = (
     OverlapSimTool(),
     RelicRestructureTool(),
     SpeculationAdvisorTool(),
+    KernelAdvisorTool(),
 )
 
 

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel layer: ops.py is the public dispatch surface (backend
+# registry + jit'd wrappers), ref.py the pure-jnp oracles, the rest the
+# kernels themselves. Model/serving code imports ops, never a kernel
+# module directly (DESIGN.md §4).

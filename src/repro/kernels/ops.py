@@ -1,4 +1,4 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels + the backend registry.
 
 Each wrapper validates shapes, checks the VMEM working-set budget implied
 by the chosen block shapes (double-buffered operands + scratch must fit),
@@ -8,10 +8,22 @@ and dispatches kernel vs. pure-jnp reference:
   on CPU, testing   → the kernel in interpret mode (correctness)
   on CPU, dry-run   → the jnp reference (so SPMD partitioning & the
                       roofline read clean HLO; see DESIGN.md §2)
+
+Dispatch is resolved ONCE (DESIGN.md §4): the generic kernel wrappers
+resolve their default ``mode`` from ``REPRO_KERNEL_MODE`` + the
+platform on first use, and the serving-attention wrappers resolve the
+*attention backend* (``"reference" | "kernel" | "interpret"``) from
+``REPRO_ATTENTION_BACKEND`` / ``set_attention_backend()`` the same way
+— both log the resolution once and fail loudly, listing the valid
+choices, on a bad override. Per-call ``mode=``/``backend=`` arguments
+always win over the resolved default.
 """
 from __future__ import annotations
 
 import functools
+import logging
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,14 +31,94 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_ops
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention as _paged_kernel,
+)
 from repro.kernels.relic_matmul import relic_gemv, relic_matmul
 from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
 
 VMEM_BYTES = 16 * 2**20  # v5e per-core VMEM budget
 
+log = logging.getLogger("repro.kernels")
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# dispatch resolution — once per process, not per call
+
+KERNEL_MODES = ("ref", "kernel", "interpret")
+_DEFAULT_MODE: Optional[str] = None  # resolved lazily, cached
+
+
+def default_kernel_mode() -> str:
+    """The ``mode="auto"`` resolution for the generic kernel wrappers:
+    ``REPRO_KERNEL_MODE`` if set (bad values fail loudly), else
+    ``"kernel"`` on TPU and ``"ref"`` elsewhere. Resolved and logged
+    once — callers no longer re-check ``jax.default_backend()`` per
+    call."""
+    global _DEFAULT_MODE
+    if _DEFAULT_MODE is None:
+        raw = os.environ.get("REPRO_KERNEL_MODE", "auto")
+        if raw not in KERNEL_MODES + ("auto",):
+            raise ValueError(
+                f"REPRO_KERNEL_MODE={raw!r} is not a valid kernel mode; "
+                f"choose one of {('auto',) + KERNEL_MODES}"
+            )
+        _DEFAULT_MODE = ("kernel" if _on_tpu() else "ref") if raw == "auto" else raw
+        log.info(
+            "kernel mode resolved once: %s (REPRO_KERNEL_MODE=%s, platform=%s)",
+            _DEFAULT_MODE, raw, jax.default_backend(),
+        )
+    return _DEFAULT_MODE
+
+
+ATTENTION_BACKENDS = ("reference", "kernel", "interpret")
+_ATTN_BACKEND: Optional[str] = None  # resolved lazily, cached
+
+
+def _validate_backend(name: str, source: str) -> str:
+    if name not in ATTENTION_BACKENDS + ("auto",):
+        raise ValueError(
+            f"{source}={name!r} is not a valid attention backend; "
+            f"choose one of {('auto',) + ATTENTION_BACKENDS}"
+        )
+    return ("kernel" if _on_tpu() else "reference") if name == "auto" else name
+
+
+def set_attention_backend(name: Optional[str]) -> None:
+    """Config-time override of the process-default attention backend
+    (``None``/``"auto"`` restores env/platform resolution on next use).
+    Jitted step families bind the backend statically at build time (the
+    serving engine resolves through here before jitting), so changing
+    the default never silently retargets an existing trace."""
+    global _ATTN_BACKEND
+    if name is not None:
+        _validate_backend(name, "backend")  # fail loudly even for "auto"
+    _ATTN_BACKEND = None if name in (None, "auto") else name
+
+
+def resolve_attention_backend(backend: Optional[str] = None) -> str:
+    """Per-call override → config override → ``REPRO_ATTENTION_BACKEND``
+    → platform default (``"kernel"`` on TPU, ``"reference"`` elsewhere).
+    An explicit ``"auto"`` defers to the same default chain as ``None``
+    (so the env override is never silently bypassed). Resolution happens
+    once and is logged once; bad names fail loudly with the valid
+    choices."""
+    if backend is not None and backend != "auto":
+        return _validate_backend(backend, "backend")
+    global _ATTN_BACKEND
+    if _ATTN_BACKEND is None:
+        raw = os.environ.get("REPRO_ATTENTION_BACKEND", "auto")
+        _ATTN_BACKEND = _validate_backend(raw, "REPRO_ATTENTION_BACKEND")
+        log.info(
+            "attention backend resolved once: %s (REPRO_ATTENTION_BACKEND=%s, "
+            "platform=%s)",
+            _ATTN_BACKEND, raw, jax.default_backend(),
+        )
+    return _ATTN_BACKEND
 
 
 def vmem_working_set(block_bytes: dict[str, int], buffering: int = 2) -> int:
@@ -48,7 +140,9 @@ def check_vmem(block_bytes: dict[str, int], buffering: int = 2) -> None:
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "mode"))
 def matmul(x, w, *, bm=256, bk=512, bn=256, mode="auto"):
     """Double-buffered block matmul (Relic pair-scheduling on one core)."""
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    if mode == "auto":
+        mode = default_kernel_mode()
+    if mode == "ref":
         return ref_ops.matmul_ref(x, w)
     itemsize = jnp.dtype(x.dtype).itemsize
     check_vmem(
@@ -64,14 +158,18 @@ def matmul(x, w, *, bm=256, bk=512, bn=256, mode="auto"):
 
 @functools.partial(jax.jit, static_argnames=("bk", "bn", "mode"))
 def gemv(x, w, *, bk=1024, bn=512, mode="auto"):
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    if mode == "auto":
+        mode = default_kernel_mode()
+    if mode == "ref":
         return ref_ops.matmul_ref(x, w)
     return relic_gemv(x, w, bk=bk, bn=bn, interpret=mode == "interpret")
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "mode"))
 def flash_attention(q, k, v, *, causal=True, bq=256, bk=512, mode="auto"):
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    if mode == "auto":
+        mode = default_kernel_mode()
+    if mode == "ref":
         return ref_ops.attention_ref(q, k, v, causal=causal)
     g = q.shape[2] // k.shape[2]
     hd = q.shape[3]
@@ -90,14 +188,74 @@ def flash_attention(q, k, v, *, causal=True, bq=256, bk=512, mode="auto"):
 
 @functools.partial(jax.jit, static_argnames=("bk", "mode"))
 def decode_attention(q, k_cache, v_cache, cache_len, *, bk=512, mode="auto"):
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    if mode == "auto":
+        mode = default_kernel_mode()
+    if mode == "ref":
         return ref_ops.decode_attention_ref(q, k_cache, v_cache, cache_len)
     return _decode_kernel(q, k_cache, v_cache, cache_len, bk=bk, interpret=mode == "interpret")
 
 
+def paged_attention(
+    q, k_pool, v_pool, block_tables, lengths, k_scale=None, v_scale=None, *, mode="auto"
+):
+    """Block-paged decode/verify attention straight off the block pool.
+
+    q [B,T,H,hd] (T static: 1 = decode, K+1 = speculative verify);
+    pools [NB,BS,KV,hd]; ``block_tables`` [B,MB] physical block ids per
+    decode row; ``lengths`` [B] committed lengths (query t attends
+    positions < lengths + t + 1). int8 pools pass per-vector
+    ``k_scale``/``v_scale`` [NB,BS,KV] and dequantize in-kernel. The
+    kernel walks the (scalar-prefetched) tables — no dense
+    ``gather_block_rows`` materialization; ``"ref"``/``"reference"`` is
+    the dense-gather oracle the differential tests compare against.
+    ``mode="auto"`` resolves through the ATTENTION registry
+    (``REPRO_ATTENTION_BACKEND``/``set_attention_backend``), not the
+    generic ``REPRO_KERNEL_MODE`` — this is the serving-attention
+    surface. Resolution happens here, OUTSIDE the jit boundary, so a
+    later registry change is honored on the next call rather than
+    silently replaying the first trace; bad modes fail loudly."""
+    if mode == "ref":
+        mode = "reference"  # the sibling wrappers' kernel-mode spelling
+    mode = resolve_attention_backend(mode)  # validates; auto → the chain
+    if mode == "reference":
+        mode = "ref"
+    return _paged_attention_impl(
+        q, k_pool, v_pool, block_tables, lengths, k_scale, v_scale, mode=mode
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _paged_attention_impl(
+    q, k_pool, v_pool, block_tables, lengths, k_scale, v_scale, *, mode
+):
+    if mode == "ref":
+        return ref_ops.paged_attention_ref(
+            q, k_pool, v_pool, block_tables, lengths, k_scale, v_scale
+        )
+    itemsize = jnp.dtype(q.dtype).itemsize
+    T, hd = q.shape[1], q.shape[3]
+    BS = k_pool.shape[1]
+    g = q.shape[2] // k_pool.shape[2]
+    check_vmem(
+        {
+            "q": T * g * hd * itemsize,
+            "k": BS * hd * jnp.dtype(k_pool.dtype).itemsize,
+            "v": BS * hd * jnp.dtype(v_pool.dtype).itemsize,
+            "acc": T * g * hd * 4,
+            "s": T * g * BS * 4,
+        }
+    )
+    return _paged_kernel(
+        q, k_pool, v_pool, block_tables, lengths,
+        k_scale=k_scale, v_scale=v_scale, interpret=mode == "interpret",
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "mode"))
 def ssd(xh, a, b, c, dt, *, chunk=128, mode="auto"):
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    if mode == "auto":
+        mode = default_kernel_mode()
+    if mode == "ref":
         return ref_ops.ssd_ref(xh, a, b, c, dt)
     N, hd = b.shape[-1], xh.shape[-1]
     itemsize = jnp.dtype(xh.dtype).itemsize

@@ -1,0 +1,181 @@
+"""Block-paged flash-decode/verify: attention straight off the block pool.
+
+The serving layer's paged decode used to materialize a dense
+``[B, MB·BS]`` copy of every row's KV through ``gather_block_rows``
+before attending — a per-step bandwidth tax proportional to the pool's
+*capacity*, not its contents. This kernel walks each row's block table
+instead: the index_map reads the table (scalar-prefetched into SMEM)
+and DMAs KV blocks directly from the paged pool, so the "memory
+thread" streams exactly the blocks the row owns while the "compute
+thread" runs the running-max softmax in VMEM — the same SMT-pair
+co-scheduling as ``decode_attention``, now addressed through pages.
+
+Grid ``(B, KV, MB)``: the sequential block-table axis is innermost;
+the T·g query rows of each kv group ride in the sublane dim. T is
+static — T=1 is plain decode, T=K+1 the speculative verify (query t
+attends positions < len + t + 1, so the masked reduction per query is
+bitwise the one the sequential decode would run: blocks wholly past a
+query's window contribute exp-weights of exactly zero and a
+correction factor of exactly one). Unowned table entries point at the
+pool's null block, whose data is masked off by ``lengths`` — every
+table entry is therefore always a safe DMA source. int8-KV pools
+dequantize in-kernel (per-vector scales ride in their own prefetched
+blocks), halving the streamed bytes vs a dense bf16 gather.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+NEG = -1e30
+
+
+def _paged_kernel(
+    tbl_ref,  # [B, MB] int32 (scalar prefetch)
+    len_ref,  # [B] int32 (scalar prefetch)
+    q_ref,  # [1, 1, T·g, hd]
+    k_ref,  # [1, BS, 1, hd]
+    v_ref,
+    o_ref,  # [1, 1, T·g, hd]
+    m_ref,  # [T·g, 1] f32 scratch
+    l_ref,
+    acc_ref,  # [T·g, hd] f32 scratch
+    *,
+    scale,
+    bs,
+    t,
+    g,
+    ks_ref=None,  # [1, BS, 1] per-vector scales (int8 pools)
+    vs_ref=None,
+):
+    b = pl.program_id(0)
+    mb = pl.program_id(2)
+
+    @pl.when(mb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    base = len_ref[b]  # committed length; query t sees pos < base + t + 1
+    # skip blocks wholly past the last query's window ("memory thread"
+    # stops streaming dead data — Relic's early task retire)
+    @pl.when(mb * bs < base + t)
+    def _step():
+        q = q_ref[0, 0]  # [T·g, hd]
+        k = k_ref[0, :, 0]  # [BS, hd]
+        v = v_ref[0, :, 0]
+        if ks_ref is not None:  # dequantize in-kernel: int8 · scale/127
+            k = k.astype(jnp.float32) * (
+                ks_ref[0, :, 0].astype(jnp.float32) / 127.0
+            )[:, None]
+            v = v.astype(jnp.float32) * (
+                vs_ref[0, :, 0].astype(jnp.float32) / 127.0
+            )[:, None]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [T·g, BS]
+        pos = mb * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        tq = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+        mask = pos < base + tq + 1
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(mb == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q [B,T,H,hd]; pools [NB,BS,KV,hd]; tables [B,MB] int32 block ids;
+    lengths [B] committed lengths (query t valid positions are
+    < lengths + t + 1) → out [B,T,H,hd]. int8 pools pass per-vector
+    ``k_scale``/``v_scale`` [NB,BS,KV] and dequantize in-kernel."""
+    B, T, H, hd = q.shape
+    NB, BS, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    quant = k_scale is not None
+
+    # the g query heads of each kv group — and the T verify queries —
+    # ride together in the sublane dim: [B, KV, T·g, hd]
+    qr = q.reshape(B, T, KV, g, hd).transpose(0, 2, 1, 3, 4).reshape(B, KV, T * g, hd)
+
+    grid = (B, KV, MB)
+    kv_spec = pl.BlockSpec(
+        (1, BS, 1, hd), lambda b, kv, mb, tbl, lens: (tbl[b, mb], 0, kv, 0)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, T * g, hd), lambda b, kv, mb, tbl, lens: (b, kv, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [qr, k_pool, v_pool]
+    if quant:
+        sc_spec = pl.BlockSpec(
+            (1, BS, 1), lambda b, kv, mb, tbl, lens: (tbl[b, mb], 0, kv)
+        )
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale, v_scale]
+
+    if quant:
+        # scale refs arrive positionally after v; rebind them as keywords
+        def kernel(tbl, lens, qf, kf, vf, ksf, vsf, of, mf, lf, accf):
+            return _paged_kernel(
+                tbl, lens, qf, kf, vf, of, mf, lf, accf,
+                scale=scale, bs=BS, t=T, g=g, ks_ref=ksf, vs_ref=vsf,
+            )
+    else:
+        kernel = functools.partial(_paged_kernel, scale=scale, bs=BS, t=T, g=g)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (1, 1, T * g, hd), lambda b, kv, mb, tbl, lens: (b, kv, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((T * g, 1), jnp.float32),
+                pltpu.VMEM((T * g, 1), jnp.float32),
+                pltpu.VMEM((T * g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, T * g, hd), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
+    return out.reshape(B, KV, T, g, hd).transpose(0, 2, 1, 3, 4).reshape(B, T, H, hd)

@@ -41,6 +41,35 @@ def decode_attention_ref(q, k_cache, v_cache, cache_len):
     return jnp.einsum("bhs,bshd->bhd", p.astype(vc.dtype), vc)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths, k_scale=None, v_scale=None):
+    """Dense-gather oracle for the block-paged decode/verify kernel.
+
+    q [B,T,H,hd]; pools [NB,BS,KV,hd]; tables [B,MB]; lengths [B]
+    (query t attends positions < lengths + t + 1). int8 pools pass
+    per-vector scales [NB,BS,KV]."""
+    B, T, H, hd = q.shape
+    BS, KV = k_pool.shape[1], k_pool.shape[2]
+    MB = block_tables.shape[1]
+    g = H // KV
+    kd = jnp.take(k_pool, block_tables, axis=0)  # [B, MB, BS, KV, hd]
+    vd = jnp.take(v_pool, block_tables, axis=0)
+    kd = kd.reshape(B, MB * BS, KV, hd).astype(jnp.float32)
+    vd = vd.reshape(B, MB * BS, KV, hd).astype(jnp.float32)
+    if k_scale is not None:
+        ks = jnp.take(k_scale, block_tables, axis=0).reshape(B, MB * BS, KV)
+        vs = jnp.take(v_scale, block_tables, axis=0).reshape(B, MB * BS, KV)
+        kd = kd * (ks.astype(jnp.float32) / 127.0)[..., None]
+        vd = vd * (vs.astype(jnp.float32) / 127.0)[..., None]
+    kd = jnp.repeat(kd, g, axis=2)
+    vd = jnp.repeat(vd, g, axis=2)
+    s = jnp.einsum("bthd,bshd->bths", q.astype(jnp.float32), kd) / math.sqrt(hd)
+    pos = jnp.arange(MB * BS)[None, None, :]
+    valid = pos < (lengths[:, None] + jnp.arange(T)[None, :] + 1)[:, :, None]
+    s = jnp.where(valid[:, :, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bths,bshd->bthd", p, vd).astype(q.dtype)
+
+
 def ssd_ref(xh, a, b, c, dt):
     """Sequential (unchunked) SSD recurrence — the ground truth.
 

@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.models.layers import apply_rope, constrain, normal, rope_tables
 
 NEG = -1e30
@@ -197,7 +198,12 @@ def gather_block_rows(pool_leaf, block_tables):
     [L, B, MB·BS, ...] — each row's logical KV sequence gathered through
     its block table. Fixed shape regardless of how many blocks a row
     actually owns (unowned table entries point at the null block and are
-    masked off by ``cache_len`` in ``decode_attention``)."""
+    masked off by ``cache_len`` in ``decode_attention``).
+
+    This dense materialization is the *reference/differential* path of
+    the paged layout (and the prefix-reuse ``gather_prefix``); the
+    serving hot path walks the tables inside the block-paged kernel
+    instead (DESIGN.md §4, §3.1)."""
     mb = block_tables.shape[1]
     t = jnp.take(pool_leaf, block_tables, axis=1)  # [L, B, MB, BS, ...]
     return t.reshape(t.shape[:2] + (mb * pool_leaf.shape[2],) + t.shape[4:])
@@ -228,7 +234,95 @@ def scatter_block_tokens(pool_leaf, token_rows, block_ids, offsets):
     return pool_leaf.at[:, block_ids, offsets].set(token_rows)
 
 
-def verify_attention(q, k_cache, v_cache, cache_len, *, rules=None):
+def _dense_as_pool(leaf, bs):
+    """A dense per-row cache leaf [B, Smax, ...] viewed as a block pool
+    [B·MB, BS, ...] — reshape only, no data movement — so the slot
+    layout routes through the same block-paged kernel as the paged one
+    (with the identity block table)."""
+    B, Smax = leaf.shape[0], leaf.shape[1]
+    return leaf.reshape((B * (Smax // bs), bs) + leaf.shape[2:])
+
+
+def _dense_block_size(smax, bs=256):
+    """Largest divisor of ``smax`` that is ≤ ``bs`` — the identity-table
+    pool view must tile the dense cache exactly."""
+    bs = min(bs, smax)
+    while smax % bs:
+        bs -= 1
+    return bs
+
+
+def _kernel_cached_attention(q, k_cache, v_cache, cache_len, k_scale, v_scale, backend):
+    """Dense-cache decode/verify through the block-paged kernel: the
+    [B, Smax] cache is exactly a block pool with an identity table, so
+    one kernel serves both KV layouts. ``cache_len`` is the committed
+    length — query t attends positions < cache_len + t + 1."""
+    B, T, H, hd = q.shape
+    Smax = k_cache.shape[1]
+    bs = _dense_block_size(Smax)
+    if bs < min(8, Smax):
+        # a (near-)prime max_seq has no usable tiling: the kernel grid
+        # would degrade to up to Smax single-token blocks, all DMA and
+        # rescale overhead. Keep the semantics and take the reference
+        # numerics for this shape instead — the registry contract is
+        # "same tokens", and the advisor gate measures whatever runs.
+        return _cached_attention(
+            q, k_cache, v_cache, cache_len,
+            k_scale=k_scale, v_scale=v_scale, backend="reference",
+        )
+    tables = jnp.arange(B * (Smax // bs), dtype=jnp.int32).reshape(B, Smax // bs)
+    return kernel_ops.paged_attention(
+        q,
+        _dense_as_pool(k_cache, bs),
+        _dense_as_pool(v_cache, bs),
+        tables,
+        cache_len,
+        None if k_scale is None else _dense_as_pool(k_scale, bs),
+        None if v_scale is None else _dense_as_pool(v_scale, bs),
+        mode=backend,
+    )
+
+
+def paged_attention(
+    q, k_pool, v_pool, block_tables, cache_len,
+    *, k_scale=None, v_scale=None, rules=None, backend=None,
+):
+    """Backend-dispatched paged decode/verify attention for one layer.
+
+    q [B,T,H,hd]; pools [NB,BS,KV,hd] (+ per-vector int8 scales);
+    ``block_tables`` [B,MB]; ``cache_len`` [B] committed lengths (the
+    new token rows are already scattered into the tail blocks; query t
+    attends positions < cache_len + t + 1). The kernel backends walk
+    the tables directly; the reference backend is the dense
+    ``gather_block_rows`` materialization — kept as the differential
+    oracle, no longer the serving hot path (DESIGN.md §4)."""
+    backend = kernel_ops.resolve_attention_backend(backend)
+    if backend != "reference" and rules is None:
+        return kernel_ops.paged_attention(
+            q, k_pool, v_pool, block_tables, cache_len, k_scale, v_scale,
+            mode=backend,
+        )
+    kd = gather_block_rows(k_pool[None], block_tables)[0]  # [B, MB·BS, KV, hd]
+    vd = gather_block_rows(v_pool[None], block_tables)[0]
+    if k_scale is not None:
+        kd = dequantize_kv(kd, gather_block_rows(k_scale[None], block_tables)[0], q.dtype)
+        vd = dequantize_kv(vd, gather_block_rows(v_scale[None], block_tables)[0], q.dtype)
+    return _cached_attention(q, kd, vd, cache_len, rules=rules, backend="reference")
+
+
+def block_write_positions(block_tables, cache_len, t, block_size):
+    """Per-row (physical block id, in-block offset), each [B, t], for
+    the ``t`` write positions starting at each row's committed length —
+    THE table walk every paged decode/verify write goes through (the t
+    positions may span block boundaries; dead rows' unowned table
+    entries resolve to the null block, so their writes land in
+    scratch)."""
+    pos = cache_len[:, None] + jnp.arange(t)[None, :]
+    bid = jnp.take_along_axis(block_tables, pos // block_size, axis=1)
+    return bid, pos % block_size
+
+
+def verify_attention(q, k_cache, v_cache, cache_len, *, rules=None, backend=None):
     """Multi-token (speculative verify) attention over the decode cache.
 
     q [B,T,H,hd] are T proposed tokens at absolute positions
@@ -239,8 +333,16 @@ def verify_attention(q, k_cache, v_cache, cache_len, *, rules=None):
     *static* query axis, so each query row's reduction runs over the
     identical masked [Smax] series the sequential decode would see. T
     is shape, acceptance is data: one trace serves every acceptance
-    pattern at a given speculation depth (DESIGN.md §3.2).
+    pattern at a given speculation depth (DESIGN.md §3.2). Non-reference
+    backends route through the block-paged kernel's K+1-query variant
+    (identity block table); sharded callers (``rules`` set) stay on the
+    reference path — the kernel is not SPMD-partitioned.
     """
+    backend = kernel_ops.resolve_attention_backend(backend)
+    if backend != "reference" and rules is None:
+        return _kernel_cached_attention(
+            q, k_cache, v_cache, cache_len, None, None, backend
+        )
     B, T, H, hd = q.shape
     Smax, KV = k_cache.shape[1], k_cache.shape[2]
     g = H // KV
@@ -263,22 +365,55 @@ def verify_attention(q, k_cache, v_cache, cache_len, *, rules=None):
     return out.reshape(B, T, H, hd)
 
 
-def _cached_attention(q, k_cache, v_cache, cache_len, *, rules=None):
-    """Dispatch decode-cache attention on the (static) query count: the
-    single-token path keeps the exact decode numerics, T>1 is the
-    speculative verify."""
+def _cached_attention(
+    q, k_cache, v_cache, cache_len, *, k_scale=None, v_scale=None,
+    rules=None, backend=None,
+):
+    """Dispatch decode-cache attention on the backend and the (static)
+    query count: the reference backend keeps the exact jnp decode/verify
+    numerics (dequantizing int8 caches first, as before the registry);
+    kernel backends view the dense cache as an identity-table block pool
+    and run the paged Pallas kernel — T=1 is plain decode, T>1 the
+    speculative verify, int8 scales dequantize in-kernel. Sharded
+    callers (``rules`` set) always take the reference path: the kernel
+    is not SPMD-partitioned, and silently replicating a seq-sharded
+    cache would be worse than the jnp flash-decode semantics the
+    reference implements (partial max/sum + all-reduce)."""
+    backend = kernel_ops.resolve_attention_backend(backend)
+    if backend != "reference" and rules is None:
+        return _kernel_cached_attention(
+            q, k_cache, v_cache, cache_len, k_scale, v_scale, backend
+        )
+    if k_scale is not None:
+        k_cache = dequantize_kv(k_cache, k_scale, q.dtype)
+        v_cache = dequantize_kv(v_cache, v_scale, q.dtype)
     if q.shape[1] == 1:
-        return decode_attention(q, k_cache, v_cache, cache_len + 1, rules=rules)
-    return verify_attention(q, k_cache, v_cache, cache_len, rules=rules)
+        return decode_attention(
+            q, k_cache, v_cache, cache_len + 1, rules=rules, backend="reference"
+        )
+    return verify_attention(
+        q, k_cache, v_cache, cache_len, rules=rules, backend="reference"
+    )
 
 
-def decode_attention(q, k_cache, v_cache, cache_len, *, rules=None):
+def decode_attention(q, k_cache, v_cache, cache_len, *, rules=None, backend=None):
     """One-token attention over a (possibly seq-sharded) KV cache.
 
     q [B,1,H,hd]; caches [B,Smax,KV,hd]; cache_len [B] valid lengths
     (positions < cache_len participate). Softmax over the sharded Smax dim
     partitions into partial max/sum + all-reduce (flash-decode semantics).
+    Non-reference backends route through the block-paged kernel (identity
+    block table; the kernel's committed length is ``cache_len - 1`` since
+    its single query attends one position past it); sharded callers
+    (``rules`` set) stay on the reference path — the kernel is not
+    SPMD-partitioned, and these flash-decode semantics are what the
+    seq-sharded dry-run lowers.
     """
+    backend = kernel_ops.resolve_attention_backend(backend)
+    if backend != "reference" and rules is None:
+        return _kernel_cached_attention(
+            q, k_cache, v_cache, cache_len - 1, None, None, backend
+        )
     B, _, H, hd = q.shape
     Smax, KV = k_cache.shape[1], k_cache.shape[2]
     g = H // KV
@@ -327,6 +462,7 @@ def attention_block(
     cache=None,
     cache_len=None,
     prefix_kv=None,
+    backend=None,
 ):
     """Pre-norm'd GQA attention. Returns (out, new_cache_kv).
 
@@ -338,6 +474,12 @@ def attention_block(
     accumulation is independent of which query rows run, so suffix rows
     come out bitwise-identical to a cold full-prompt prefill.
     Decode: x is [B,1,D]; cache = (k,v) [B,Smax,KV,hd]; cache_len [B].
+    Paged decode/verify: cache is a dict {k, v[, k_scale, v_scale],
+    tables, li} of layer-stacked pool leaves [L,NB,BS,KV,hd] plus the
+    per-row block tables — the new token rows scatter into each row's
+    tail block and attention walks the tables (DESIGN.md §4).
+    ``backend`` picks the decode/verify attention backend (None → the
+    ops registry default).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -378,6 +520,42 @@ def attention_block(
             q, k, v, chunk=cfg.attn_chunk, blocking=cfg.causal_blocking, rules=rules
         )
         new_kv = (k, v)
+    elif isinstance(cache, dict):
+        # block-paged pool (layer-stacked leaves + per-row tables): the
+        # new token rows scatter into each row's tail block, then the
+        # backend attends through the tables — no dense gather on the
+        # kernel backends (DESIGN.md §4). Dead rows' tables point at the
+        # null block, so their writes land in scratch.
+        tables, li = cache["tables"], cache["li"]
+        bs = cache["k"].shape[2]
+        T = k.shape[1]
+        bid, off = block_write_positions(tables, cache_len, T, bs)
+        quant = "k_scale" in cache
+        if quant:
+            k_q, k_s = quantize_kv(k)
+            v_q, v_s = quantize_kv(v)
+            writes = (("k", k_q), ("k_scale", k_s), ("v", v_q), ("v_scale", v_s))
+        else:
+            writes = (("k", k), ("v", v))
+        stacks = {
+            name: cache[name].at[li, bid, off].set(val.astype(cache[name].dtype))
+            for name, val in writes
+        }
+        leaf = lambda name: jax.lax.dynamic_index_in_dim(
+            stacks[name], li, 0, keepdims=False
+        )
+        out = paged_attention(
+            q,
+            leaf("k"),
+            leaf("v"),
+            tables,
+            cache_len,
+            k_scale=leaf("k_scale") if quant else None,
+            v_scale=leaf("v_scale") if quant else None,
+            rules=rules,
+            backend=backend,
+        )
+        new_kv = tuple(stacks[name] for name, _ in writes)
     elif len(cache) == 5:
         # int8-quantized stacked cache: (k_all int8, k_scale, v_all int8,
         # v_scale, layer_idx). Reads move half the bytes of bf16.
@@ -388,17 +566,17 @@ def attention_block(
         ks_all = scatter_token(ks_all, k_s, cache_len, li)
         v_all = scatter_token(v_all, v_q, cache_len, li)
         vs_all = scatter_token(vs_all, v_s, cache_len, li)
-        k_cache = dequantize_kv(
-            jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False),
-            jax.lax.dynamic_index_in_dim(ks_all, li, 0, keepdims=False),
-            x.dtype,
+        take = lambda s: jax.lax.dynamic_index_in_dim(s, li, 0, keepdims=False)
+        out = _cached_attention(
+            q,
+            take(k_all),
+            take(v_all),
+            cache_len,
+            k_scale=take(ks_all),
+            v_scale=take(vs_all),
+            rules=rules,
+            backend=backend,
         )
-        v_cache = dequantize_kv(
-            jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False),
-            jax.lax.dynamic_index_in_dim(vs_all, li, 0, keepdims=False),
-            x.dtype,
-        )
-        out = _cached_attention(q, k_cache, v_cache, cache_len, rules=rules)
         new_kv = (k_all, ks_all, v_all, vs_all)
     elif len(cache) == 3:
         # stacked-cache decode: (k_all [L,B,S,KV,hd], v_all, layer_idx).
@@ -413,7 +591,9 @@ def attention_block(
         v_all = scatter_token(v_all, v, cache_len, li)
         k_cache = jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False)
         v_cache = jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False)
-        out = _cached_attention(q, k_cache, v_cache, cache_len, rules=rules)
+        out = _cached_attention(
+            q, k_cache, v_cache, cache_len, rules=rules, backend=backend
+        )
         new_kv = (k_all, v_all)
     else:
         k_cache, v_cache = cache
@@ -422,7 +602,9 @@ def attention_block(
         # insert the new token(s) at each row's own cache_len
         k_cache = scatter_token_flat(k_cache, k, cache_len)
         v_cache = scatter_token_flat(v_cache, v, cache_len)
-        out = _cached_attention(q, k_cache, v_cache, cache_len, rules=rules)
+        out = _cached_attention(
+            q, k_cache, v_cache, cache_len, rules=rules, backend=backend
+        )
         new_kv = (k_cache, v_cache)
 
     if params["wo"].ndim == 2:  # flat-TP layout

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -153,7 +154,8 @@ class Model:
     # ------------------------------------------------------------------
     # shared layer bodies
     def _dense_layer(
-        self, x, lp, path, positions=None, cache=None, cache_len=None, prefix_kv=None
+        self, x, lp, path, positions=None, cache=None, cache_len=None,
+        prefix_kv=None, backend=None,
     ):
         cfg, rules = self.cfg, self.rules
         h, new_kv = attn.attention_block(
@@ -165,6 +167,7 @@ class Model:
             cache=cache,
             cache_len=cache_len,
             prefix_kv=prefix_kv,
+            backend=backend,
         )
         x = x + h
         hin = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
@@ -302,6 +305,17 @@ class Model:
 
     # ------------------------------------------------------------------
     # decode
+    def jit_step(self, name: str, backend=None):
+        """``jax.jit`` of one decode-family step (``decode_step``,
+        ``verify_step``, ``decode_step_paged``, ``verify_step_paged``)
+        with the attention backend resolved and bound STATICALLY.
+        The single place backend binding happens (engine, scheduler,
+        and draft streams all build their step fns here), so the
+        registry is consulted before tracing — a later registry change
+        can never silently retarget an existing trace (DESIGN.md §4)."""
+        backend = kernel_ops.resolve_attention_backend(backend)
+        return jax.jit(functools.partial(getattr(self, name), backend=backend))
+
     def init_cache(self, batch, max_seq, dtype=None):
         cfg = self.cfg
         dt = dtype or _dtype(cfg)
@@ -416,22 +430,37 @@ class Model:
             for name, leaf in pool.items()
         }
 
-    def decode_step_paged(self, params, pool, block_tables, cache_len, tokens):
+    def decode_step_paged(
+        self, params, pool, block_tables, cache_len, tokens, *, backend=None
+    ):
         """One decode token over a block-paged KV cache.
 
-        Reads gather each row's K/V through its block table into the
-        fixed-shape dense view and run the ordinary ``decode_step``
-        (identical numerics); the one token that step appends is then
-        scattered back into each row's tail block. Shared prefix blocks
-        are never a write target (the scheduler only shares immutable
-        full-prompt blocks), so the scatter touches exclusively-owned
-        blocks only. ``block_tables`` and ``cache_len`` are data, not
-        shape: one jit trace serves any block layout and live set."""
+        Kernel backends run the layer scan directly over the pool: each
+        layer scatters the new token's KV rows into the row's tail block
+        and attends *through the block tables* inside the Pallas kernel
+        — no dense materialization (DESIGN.md §4). The reference backend
+        keeps the original differential route: gather each row's K/V
+        through its table into the fixed-shape dense view
+        (``gather_block_rows``), run the ordinary ``decode_step``
+        (identical numerics), scatter the appended token back. Shared
+        prefix blocks are never a write target (the scheduler only
+        shares immutable full-prompt blocks), so the scatter touches
+        exclusively-owned blocks only. ``block_tables`` and
+        ``cache_len`` are data, not shape: one jit trace serves any
+        block layout and live set."""
+        backend = kernel_ops.resolve_attention_backend(backend)
+        if backend != "reference":
+            logits, new_pool = self._step_paged_kernel(
+                params, pool, block_tables, cache_len, tokens, backend
+            )
+            return logits[:, 0], new_pool
         bs = pool["k"].shape[2]
         dense = self.paged_view(pool, block_tables)
-        logits, new_dense = self.decode_step(params, dict(dense, len=cache_len), tokens)
-        bid = jnp.take_along_axis(block_tables, (cache_len // bs)[:, None], axis=1)[:, 0]
-        off = cache_len % bs
+        logits, new_dense = self.decode_step(
+            params, dict(dense, len=cache_len), tokens, backend="reference"
+        )
+        bid, off = attn.block_write_positions(block_tables, cache_len, 1, bs)
+        bid, off = bid[:, 0], off[:, 0]
         new_pool = {}
         for name, leaf in pool.items():
             nd = new_dense[name]  # [L, B, MB·BS, ...]
@@ -440,9 +469,43 @@ class Model:
             new_pool[name] = attn.scatter_block_token(leaf, token_rows, bid, off)
         return logits, new_pool
 
+    def _step_paged_kernel(self, params, pool, block_tables, cache_len, tokens, backend):
+        """Shared decode/verify layer scan over the block pool itself:
+        the per-layer cache is the dict form ``attention_block`` pages
+        through (tail-block scatter + table-walking kernel attention).
+        tokens [B,T] (T=1 decode, K+1 verify) → (logits [B,T,V], new
+        pool). Tables and lengths stay data — one trace per (T, backend)."""
+        cfg, rules = self.cfg, self.rules
+        B, T = tokens.shape
+        x = embed_tokens(params["embed"], tokens, rules)
+        x = constrain(rules, x, ("batch", "seq", None))
+        positions = cache_len[:, None] + jnp.arange(T)[None, :]
+        names = ("k", "k_scale", "v", "v_scale") if cfg.kv_quant else ("k", "v")
+
+        def body(carry, xs):
+            x, leaves = carry
+            lp, li = xs
+            cache = dict(zip(names, leaves), tables=block_tables, li=li)
+            xo, _, new_leaves = self._dense_layer(
+                x, lp, "dense", positions=positions, cache=cache,
+                cache_len=cache_len, backend=backend,
+            )
+            return (xo, new_leaves), None
+
+        (x, leaves), _ = jax.lax.scan(
+            body,
+            (x, tuple(pool[n] for n in names)),
+            (params["layers"], jnp.arange(cfg.num_layers)),
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("btd,dv->btv", x, head)
+        logits = constrain(rules, logits, ("batch", None, "vocab"))
+        return logits, dict(zip(names, leaves))
+
     # ------------------------------------------------------------------
     # speculative verify (serve/speculative.py)
-    def verify_step(self, params, cache, tokens):
+    def verify_step(self, params, cache, tokens, *, backend=None):
         """tokens [B,T] (pending token + T-1 draft tokens) → (logits
         [B,T,V], new cache with len += T). One speculative verify.
 
@@ -477,6 +540,7 @@ class Model:
                 xo, _, (ks, kss, vs, vss) = self._dense_layer(
                     x, lp, "dense", positions=positions,
                     cache=(ks, kss, vs, vss, li), cache_len=cache["len"],
+                    backend=backend,
                 )
                 return (xo, ks, kss, vs, vss), None
 
@@ -495,6 +559,7 @@ class Model:
                 xo, _, (ks, vs) = self._dense_layer(
                     x, lp, "dense", positions=positions,
                     cache=(ks, vs, li), cache_len=cache["len"],
+                    backend=backend,
                 )
                 return (xo, ks, vs), None
 
@@ -511,24 +576,40 @@ class Model:
         logits = constrain(rules, logits, ("batch", None, "vocab"))
         return logits, new_cache
 
-    def verify_step_paged(self, params, pool, block_tables, cache_len, tokens):
+    def verify_step_paged(
+        self, params, pool, block_tables, cache_len, tokens, *, backend=None
+    ):
         """Speculative verify over the block-paged cache.
 
-        Gathers each row's dense view through its block table, runs the
+        Kernel backends run the same table-walking layer scan as
+        ``decode_step_paged`` with T = K+1 queries (the kernel's verify
+        variant; the T positions may cross a block boundary — the
+        scheduler pre-claims every reachable tail block via
+        ``ensure_tail_n`` before calling). The reference backend
+        gathers each row's dense view through its block table, runs the
         ordinary ``verify_step`` (identical numerics), then scatters the
         T new per-token KV rows back through the tables
-        (``scatter_block_tokens`` — the T positions may cross a block
-        boundary; the scheduler pre-claims every reachable tail block
-        via ``ensure_tail_n`` before calling). Dead rows' tables point
-        at the null block, so their writes land in scratch. Tables,
-        lengths, and acceptance are data: one trace per depth."""
+        (``scatter_block_tokens``). Dead rows' tables point at the null
+        block, so their writes land in scratch. Tables, lengths, and
+        acceptance are data: one trace per depth."""
+        backend = kernel_ops.resolve_attention_backend(backend)
+        if backend != "reference":
+            if self.cfg.family not in SPEC_FAMILIES:
+                raise ValueError(
+                    f"verify_step is only greedy-equivalent for {SPEC_FAMILIES}, "
+                    f"got {self.cfg.family!r}"
+                )
+            return self._step_paged_kernel(
+                params, pool, block_tables, cache_len, tokens, backend
+            )
         bs = pool["k"].shape[2]
         T = tokens.shape[1]
         dense = self.paged_view(pool, block_tables)
-        logits, new_dense = self.verify_step(params, dict(dense, len=cache_len), tokens)
+        logits, new_dense = self.verify_step(
+            params, dict(dense, len=cache_len), tokens, backend="reference"
+        )
+        bid, off = attn.block_write_positions(block_tables, cache_len, T, bs)
         pos = cache_len[:, None] + jnp.arange(T)[None, :]  # [B, T]
-        bid = jnp.take_along_axis(block_tables, pos // bs, axis=1)
-        off = pos % bs
         new_pool = {}
         for name, leaf in pool.items():
             nd = new_dense[name]  # [L, B, MB·BS, ...]
@@ -537,8 +618,10 @@ class Model:
             new_pool[name] = attn.scatter_block_tokens(leaf, token_rows, bid, off)
         return logits, new_pool
 
-    def decode_step(self, params, cache, tokens):
-        """tokens [B,1] → (logits [B,V], new cache). One new token."""
+    def decode_step(self, params, cache, tokens, *, backend=None):
+        """tokens [B,1] → (logits [B,V], new cache). One new token.
+        ``backend`` picks the cached-attention backend (DESIGN.md §4);
+        None resolves the ops-registry default at trace time."""
         cfg, rules = self.cfg, self.rules
         B = tokens.shape[0]
         x = embed_tokens(params["embed"], tokens, rules)
@@ -553,6 +636,7 @@ class Model:
                 xo, _, (kc, vc) = self._dense_layer(
                     x, lp, "dense", positions=positions,
                     cache=(kc, vc), cache_len=cache["len"],
+                    backend=backend,
                 )
                 return xo, (kc, vc)
 
@@ -568,6 +652,7 @@ class Model:
                 xo, _, (ks, kss, vs, vss) = self._dense_layer(
                     x, lp, "dense", positions=positions,
                     cache=(ks, kss, vs, vss, li), cache_len=cache["len"],
+                    backend=backend,
                 )
                 return (xo, ks, kss, vs, vss), None
 
@@ -587,6 +672,7 @@ class Model:
                 xo, _, (ks, vs) = self._dense_layer(
                     x, lp, "dense", positions=positions,
                     cache=(ks, vs, li), cache_len=cache["len"],
+                    backend=backend,
                 )
                 return (xo, ks, vs), None
 
@@ -606,7 +692,7 @@ class Model:
             x, sts = jax.lax.scan(body, x, (params["layers"], cache["ssm_state"]))
             new_cache = {"ssm_state": sts, "len": cache["len"] + 1}
         elif cfg.family == "hybrid":
-            x, new_cache = self._hybrid_decode(params, x, cache, positions)
+            x, new_cache = self._hybrid_decode(params, x, cache, positions, backend)
         else:
             raise ValueError(cfg.family)
 
@@ -616,7 +702,7 @@ class Model:
         logits = constrain(rules, logits, ("batch", "vocab"))
         return logits, new_cache
 
-    def _hybrid_decode(self, params, x, cache, positions):
+    def _hybrid_decode(self, params, x, cache, positions, backend=None):
         cfg = self.cfg
         shared = params["shared"]
         glp = self._hybrid_grouped_params(params)
@@ -649,6 +735,7 @@ class Model:
                 positions=positions,
                 cache=kv + (gi,),  # in-place token write into the stack
                 cache_len=cache["len"],
+                backend=backend,
             )
             x = x + h
             x = x + swiglu(

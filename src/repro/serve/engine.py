@@ -35,6 +35,13 @@ it *servable*: requests are admitted, decoded, and retired individually
                 baseline. ``spec=SpecConfig(...)`` (constructor default
                 or per-call) turns on speculative decoding — greedy
                 token streams are unchanged by construction.
+                ``attention_backend=`` (constructor default or
+                per-call) picks the decode/verify attention backend
+                (DESIGN.md §4): the block-paged Pallas kernel walks
+                block tables directly — no dense gather per step — and
+                each backend gets its own statically-bound jitted step
+                family, so switching never retraces another backend's
+                executables.
 """
 from __future__ import annotations
 
@@ -43,6 +50,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.serve.request import Request, ServeStats  # noqa: F401 (re-export)
 from repro.serve.scheduler import Scheduler
 
@@ -62,6 +70,7 @@ class ServingEngine:
         num_blocks: Optional[int] = None,
         prefix_cache: bool = True,
         spec=None,
+        attention_backend: Optional[str] = None,
     ):
         self.model = model
         self.params = params
@@ -73,30 +82,43 @@ class ServingEngine:
         self.num_blocks = num_blocks
         self.prefix_cache = prefix_cache
         self.spec = spec  # default SpecConfig for serve()/scheduler()
+        # the decode/verify attention backend is resolved ONCE, here,
+        # before anything is jitted (DESIGN.md §4): each backend gets its
+        # own statically-bound jitted step family in ``self._steps``, so
+        # switching backends (per serve()/scheduler() call) reuses that
+        # backend's compiled executables and can never retarget — or
+        # retrace — another backend's traces.
+        self.attention_backend = kernel_ops.resolve_attention_backend(attention_backend)
         # engine-owned jitted steps, shared by every scheduler this engine
         # makes: repeated generate()/serve() calls reuse the executables
         self._prefill = jax.jit(lambda p, t, **kw: model.prefill(p, t, max_seq, **kw))
-        self._decode = jax.jit(model.decode_step)
-        # paged/speculative steps are built lazily: only attention
-        # families page, only SPEC_FAMILIES verify
-        self._decode_paged = None
-        self._prefill_prefix = None
-        self._verify = None
-        self._verify_paged = None
+        self._prefill_prefix = None  # lazy: attention families only
+        self._steps: dict[str, dict] = {}  # backend → jitted decode/verify family
         self._plan_steps: dict = {}  # (plan key, pool size) → jitted plan step
         self._decode_plan = None
         self.stats = ServeStats()
         if decode_plan is not None:
             self.set_decode_plan(decode_plan)
 
-    def _paged_fns(self):
-        if self._decode_paged is None:
+    def _step_fns(self, backend: str) -> dict:
+        """The jitted decode/verify family for ``backend``, built lazily
+        (only attention families page, only SPEC_FAMILIES verify) and
+        cached per backend."""
+        fns = self._steps.setdefault(backend, {})
+        if "decode" not in fns:
+            fns["decode"] = self.model.jit_step("decode_step", backend)
+        return fns
+
+    def _paged_fns(self, backend: str):
+        fns = self._step_fns(backend)
+        if "decode_paged" not in fns:
+            fns["decode_paged"] = self.model.jit_step("decode_step_paged", backend)
+        if self._prefill_prefix is None:
             model, max_seq = self.model, self.max_seq
-            self._decode_paged = jax.jit(model.decode_step_paged)
             self._prefill_prefix = jax.jit(
                 lambda p, t, pk, pv: model.prefill_with_prefix(p, t, pk, pv, max_seq)
             )
-        return self._decode_paged, self._prefill_prefix
+        return fns["decode_paged"], self._prefill_prefix
 
     # ------------------------------------------------------------------
     # the decode step as an advisable region (requests = work items)
@@ -110,15 +132,19 @@ class ServingEngine:
 
     def _per_request_decode(self, treedef, axes):
         """Per-item fn over (token, batchless cache leaves): one request's
-        decode step — what relic_pfor co-schedules across requests."""
-        model, params = self.model, self.params
+        decode step — what relic_pfor co-schedules across requests.
+        Decodes through the engine's resolved attention backend, like
+        every other step family."""
+        model, params, backend = self.model, self.params, self.attention_backend
 
         def fn(item):
             tok, leaves = item
             cache = jax.tree.unflatten(
                 treedef, [jnp.expand_dims(l, ax) for l, ax in zip(leaves, axes)]
             )
-            logits, new_cache = model.decode_step(params, cache, tok.reshape(1, 1))
+            logits, new_cache = model.decode_step(
+                params, cache, tok.reshape(1, 1), backend=backend
+            )
             new_leaves = [
                 jnp.moveaxis(l, ax, 0)[0]
                 for l, ax in zip(jax.tree.leaves(new_cache), axes)
@@ -189,12 +215,13 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     # serving entries
-    def _spec_fns(self, layout: str):
-        if self._verify is None:
-            self._verify = jax.jit(self.model.verify_step)
-        if layout == "paged" and self._verify_paged is None:
-            self._verify_paged = jax.jit(self.model.verify_step_paged)
-        return self._verify, self._verify_paged
+    def _spec_fns(self, layout: str, backend: str):
+        fns = self._step_fns(backend)
+        if "verify" not in fns:
+            fns["verify"] = self.model.jit_step("verify_step", backend)
+        if layout == "paged" and "verify_paged" not in fns:
+            fns["verify_paged"] = self.model.jit_step("verify_step_paged", backend)
+        return fns["verify"], fns.get("verify_paged")
 
     def scheduler(
         self,
@@ -203,16 +230,32 @@ class ServingEngine:
         seed: int = 0,
         kv_layout: Optional[str] = None,
         spec=None,
+        attention_backend: Optional[str] = None,
     ) -> Scheduler:
         """A fresh continuous-batching scheduler over ``max_batch`` rows
         (slots, or paged block tables), sharing this engine's stats,
         jitted steps, and decode plan. ``spec`` overrides the engine's
-        default ``SpecConfig`` (``SpecConfig(k=0)`` disables)."""
+        default ``SpecConfig`` (``SpecConfig(k=0)`` disables);
+        ``attention_backend`` overrides the engine default — each
+        backend's jitted step family is cached separately, so switching
+        is retrace-free after first use."""
         layout = kv_layout or self.kv_layout
         spec = spec if spec is not None else self.spec
+        backend = kernel_ops.resolve_attention_backend(
+            attention_backend or self.attention_backend
+        )
+        if self._decode_plan is not None and backend != self.attention_backend:
+            # the plan's per-request fn captured the engine backend when
+            # the region was advised; honoring a different per-call
+            # backend here would silently run (and mislabel) the old one
+            raise ValueError(
+                f"attention_backend={backend!r} cannot override a decode "
+                f"plan advised under {self.attention_backend!r} — re-advise "
+                "decode_region() on an engine built with that backend"
+            )
         paged_kw = {}
         if layout == "paged":
-            decode_paged, prefill_prefix = self._paged_fns()
+            decode_paged, prefill_prefix = self._paged_fns(backend)
             paged_kw = dict(
                 block_size=self.block_size,
                 num_blocks=self.num_blocks,
@@ -221,7 +264,7 @@ class ServingEngine:
                 prefix_prefill_fn=prefill_prefix,
             )
         if spec is not None and spec.k > 0:
-            verify, verify_paged = self._spec_fns(layout)
+            verify, verify_paged = self._spec_fns(layout, backend)
             paged_kw.update(verify_fn=verify, paged_verify_fn=verify_paged)
         return Scheduler(
             self.model,
@@ -234,8 +277,9 @@ class ServingEngine:
             seed=seed,
             kv_layout=layout,
             spec=spec,
+            attention_backend=backend,
             prefill_fn=self._prefill,
-            decode_fn=self._decode,
+            decode_fn=self._step_fns(backend)["decode"],
             plan_step_cache=self._plan_steps,
             **paged_kw,
         )
@@ -248,16 +292,21 @@ class ServingEngine:
         seed: int = 0,
         kv_layout: Optional[str] = None,
         spec=None,
+        attention_backend: Optional[str] = None,
     ) -> dict:
         """Continuous-batching entry: drive ``requests`` (each with its
         own arrival time, prompt length, and token budget) to completion
         through a slotted or block-paged pool, optionally speculating
         ``spec.k`` draft tokens per verify (greedy streams unchanged —
-        ``spec`` usually comes from ``speculative.advise_depth``).
+        ``spec`` usually comes from ``speculative.advise_depth``) and
+        optionally overriding the attention backend for this run.
         Returns rid → generated tokens."""
         requests = list(requests)
         mb = max_batch or self.max_batch or max(1, min(8, len(requests)))
-        return self.scheduler(mb, seed=seed, kv_layout=kv_layout, spec=spec).run(requests)
+        return self.scheduler(
+            mb, seed=seed, kv_layout=kv_layout, spec=spec,
+            attention_backend=attention_backend,
+        ).run(requests)
 
     def _sample(self, logits, key):
         if self.temperature <= 0.0:

@@ -277,6 +277,21 @@ class PagedKVCache:
 
     # ------------------------------------------------------------------
     # cache I/O
+    def kernel_inputs(self):
+        """The pool in the attention kernel's expected layout:
+        ``(pool, block_tables, cache_len)`` with tables/lengths as
+        device int32 arrays. Pool leaves are layer-stacked
+        ``[L, NB+1, BS, ...]`` — block-major with ``block_size`` in the
+        sequence slot — which is exactly what
+        ``Model.decode_step_paged``/``verify_step_paged`` (and the
+        block-paged Pallas kernel underneath) consume; the extra block
+        is the null block dead rows write into."""
+        return (
+            self.pool,
+            jnp.asarray(self.block_tables),
+            jnp.asarray(self.cache_len),
+        )
+
     def gather_prefix(self, hit_ids: list[int]):
         """(k, v) [L, 1, h, KV, hd] — a hit chain's post-RoPE KV rows,
         dense, for ``Model.prefill_with_prefix``. int8 pools dequantize

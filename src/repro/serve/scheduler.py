@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kernel_ops
 from repro.serve.kv_cache import PagedKVCache, SlotKVCache
 from repro.serve.request import DECODE, FINISHED, PREFILL, Request, ServeStats
 
@@ -69,6 +70,7 @@ class Scheduler:
         num_blocks: Optional[int] = None,
         prefix_cache: bool = True,
         spec=None,
+        attention_backend: Optional[str] = None,
         prefill_fn=None,
         decode_fn=None,
         paged_decode_fn=None,
@@ -101,6 +103,11 @@ class Scheduler:
             )
         else:
             self.kv = SlotKVCache(model, max_batch, max_seq)
+        # resolve the decode/verify attention backend ONCE, before any
+        # jit: the jitted step family binds it statically, so backend
+        # choice can never leak between traces (DESIGN.md §4). Engine-
+        # made schedulers receive already-bound fns instead.
+        self.attention_backend = kernel_ops.resolve_attention_backend(attention_backend)
         self.stats = stats if stats is not None else ServeStats()
         self._queue: list[Request] = []  # sorted by (arrival_time, rid)
         self._active: dict[int, Request] = {}  # row → request
@@ -113,9 +120,10 @@ class Scheduler:
         self._prefill = prefill_fn or jax.jit(
             lambda p, t, **kw: model.prefill(p, t, max_seq, **kw)
         )
-        self._decode = decode_fn or jax.jit(model.decode_step)
+        be = self.attention_backend
+        self._decode = decode_fn or model.jit_step("decode_step", be)
         self._decode_paged = paged_decode_fn or (
-            jax.jit(model.decode_step_paged) if kv_layout == "paged" else None
+            model.jit_step("decode_step_paged", be) if kv_layout == "paged" else None
         )
         self._prefill_prefix = prefix_prefill_fn or (
             jax.jit(lambda p, t, pk, pv: model.prefill_with_prefix(p, t, pk, pv, max_seq))
@@ -144,11 +152,11 @@ class Scheduler:
                     "speculation and decode plans both rewrite the decode "
                     "step — set one or the other"
                 )
-            self._drafter = self.spec.make_drafter()
+            self._drafter = self.spec.make_drafter(attention_backend=be)
             self._drafter.bind(max_batch, max_seq)
-            self._verify = verify_fn or jax.jit(model.verify_step)
+            self._verify = verify_fn or model.jit_step("verify_step", be)
             self._verify_paged = paged_verify_fn or (
-                jax.jit(model.verify_step_paged) if kv_layout == "paged" else None
+                model.jit_step("verify_step_paged", be) if kv_layout == "paged" else None
             )
         self._plan_steps = plan_step_cache if plan_step_cache is not None else {}
         self._decode_plan = None
@@ -361,12 +369,9 @@ class Scheduler:
         if self.kv_layout == "paged":
             for row in self._active:
                 self.kv.ensure_tail(row)
+            pool, tables, lens = self.kv.kernel_inputs()
             logits, new_pool = self._decode_paged(
-                self.params,
-                self.kv.pool,
-                jnp.asarray(self.kv.block_tables),
-                jnp.asarray(self.kv.cache_len),
-                self._tok[:, None],
+                self.params, pool, tables, lens, self._tok[:, None]
             )
             logits.block_until_ready()
             self.kv.pool = new_pool
@@ -407,12 +412,9 @@ class Scheduler:
         if self.kv_layout == "paged":
             for row in self._active:
                 self.kv.ensure_tail_n(row, K + 1)
+            pool, tables, lens = self.kv.kernel_inputs()
             logits, new_pool = self._verify_paged(
-                self.params,
-                self.kv.pool,
-                jnp.asarray(self.kv.block_tables),
-                jnp.asarray(self.kv.cache_len),
-                tokens_in,
+                self.params, pool, tables, lens, tokens_in
             )
             logits.block_until_ready()
             self.kv.pool = new_pool

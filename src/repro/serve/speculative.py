@@ -77,7 +77,10 @@ class SpecConfig:
     draft_model: Any = None  # repro.models.Model (drafter="model")
     draft_params: Any = None
 
-    def make_drafter(self):
+    def make_drafter(self, attention_backend=None):
+        """Build the draft stream; a model drafter decodes through
+        ``attention_backend`` (the scheduler passes its resolved
+        backend, so draft and target ride the same kernel path)."""
         if self.k <= 0:
             return None
         if self.drafter == "ngram":
@@ -85,7 +88,10 @@ class SpecConfig:
         if self.drafter == "model":
             if self.draft_model is None:
                 raise ValueError("drafter='model' needs draft_model/draft_params")
-            return ModelDraftSource(self.draft_model, self.draft_params, self.k)
+            return ModelDraftSource(
+                self.draft_model, self.draft_params, self.k,
+                attention_backend=attention_backend,
+            )
         return self.drafter
 
 
@@ -158,7 +164,7 @@ class ModelDraftSource:
     The draft rows carry ``k+1`` tokens of speculative overhang, hence
     the padded ``max_seq``."""
 
-    def __init__(self, model, params, k: int):
+    def __init__(self, model, params, k: int, attention_backend=None):
         from repro.models.model import SPEC_FAMILIES
 
         if model.cfg.family not in SPEC_FAMILIES:
@@ -169,7 +175,10 @@ class ModelDraftSource:
         self.model = model
         self.params = params
         self.k = int(k)
-        self._decode = jax.jit(model.decode_step)
+        # the draft stream decodes through the same attention backend
+        # as the target (the scheduler passes its resolved backend via
+        # make_drafter), bound statically like every jitted step
+        self._decode = model.jit_step("decode_step", attention_backend)
         self._prefill = None  # needs max_seq: built in bind()
         self.cache = None
 

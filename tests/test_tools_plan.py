@@ -128,10 +128,11 @@ def test_recording_then_replay_policy():
     d1 = Aira(hw=CPU_HW, policy=rec).advise(Workload("w", lambda: None, [region])).decisions[0]
     assert d1.accepted
     stages = [stage for (_, stage, _, _) in rec.record]
-    # "speculate" rides in DEFAULT_TOOLS but SKIPs (silently) for
-    # compute regions — it still passes through the policy seat
+    # "speculate" and "kernel" ride in DEFAULT_TOOLS but SKIP (silently)
+    # for compute regions — they still pass through the policy seat
     assert stages == [
         "profile", "static", "dynamic", "simulate", "restructure", "speculate",
+        "kernel",
     ]
     assert all(action == CONTINUE for (_, _, _, action) in rec.record)
 
