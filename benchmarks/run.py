@@ -108,6 +108,12 @@ def main() -> None:
     # interpret mode on CPU CI), token-identity asserted per layout,
     # advised backend from the measured per-step cost (DESIGN.md §4)
     serving["attention_backend"] = serving_load.run_backend_sweep()
+    print()
+    # SLO-attainment goodput under overload: chunked vs monolithic
+    # prefill on the mixed-priority workload, preemption pressure on —
+    # the chunked-p99-step and nonzero-goodput asserts are the tracked
+    # scheduling contract (DESIGN.md §3.3)
+    serving["slo"] = serving_load.run_slo(overload=True)
     write_summary(rows, gm_pos, gm_all, ubench_us, serving=serving)
 
 

@@ -34,6 +34,22 @@ reference) at a serving-representative shape, and feeds the measured
 per-step costs to the ``KernelAdvisorTool`` so the advised backend per
 (family, layout, K) cell lands in the summary — measured, not assumed.
 
+The SLO mode (``run_slo`` / ``--chunked [--overload]``) serves the
+mixed interactive/batch workload (short high-priority prompts with a
+long low-priority prompt every fourth arrival) once with monolithic
+prefill and once chunked (``chunk_size`` prompt tokens per decode
+step), on identical arrivals and a deliberately under-provisioned
+paged pool, and reports SLO-attainment *goodput* — the fraction of
+requests finishing within a TTFT/TPOT budget — for both. Monolithic
+prefill stalls every co-resident decode for the full long-prompt
+forward (and re-stalls on preemption-resume recompute, where its
+prompt shapes also pay retraces the chunked trace family never
+does — that tail is the measured phenomenon, not an artifact);
+chunking bounds per-step work at ``chunk_size`` tokens, which is the
+p99-step contract asserted here. The CI smoke contract: nonzero
+preemptions under overload, nonzero goodput, and a strictly smaller
+chunked p99 step.
+
 Feeds the ``serving`` section of ``BENCH_aira.json`` (benchmarks/run.py)
 so serving latency is tracked across PRs. Request generation lives in
 ``repro.serve.load`` (shared with examples/serve_decode.py).
@@ -434,6 +450,167 @@ def run_speculative(
     return summary
 
 
+def _goodput(reqs, ttft_slo_ms: float, tpot_slo_ms) -> float:
+    """Fraction of requests that finished AND met the latency SLO:
+    TTFT (queueing included — the user-visible number) within
+    ``ttft_slo_ms``, and, when ``tpot_slo_ms`` is set and the request
+    decoded more than one token, per-token latency within it."""
+    ok = 0
+    for r in reqs:
+        good = r.finished and r.ttft_ms is not None and r.ttft_ms <= ttft_slo_ms
+        if good and tpot_slo_ms is not None and r.tpot_ms is not None:
+            good = r.tpot_ms <= tpot_slo_ms
+        ok += bool(good)
+    return ok / len(reqs) if reqs else 0.0
+
+
+def run_slo(
+    *,
+    arch: str = "smollm-135m",
+    n_requests: int = 20,
+    rate_rps: float = 60.0,
+    max_batch: int = 4,
+    tokens: int = 8,
+    chunk_size: int = 16,
+    long_len: int = 192,
+    short_lens=(8, 16),
+    block_size: int = 16,
+    num_blocks=None,
+    ttft_slo_steps: float = 12.0,
+    tpot_slo_steps: float = 4.0,
+    overload: bool = True,
+    seed: int = 0,
+    print_fn=print,
+) -> dict:
+    """Chunked vs monolithic prefill under priority load: SLO goodput.
+
+    Identical Poisson workload (every 4th arrival a ``long_len``-token
+    low-priority prompt, the rest short high-priority interactive
+    requests) served twice through one paged engine — monolithic
+    (``chunk_size=0``) then chunked — so both modes share jit caches
+    and warm on a same-seeded run. ``overload=True`` under-provisions
+    the block pool so high-priority arrivals preempt the long request
+    mid-flight (the resume recompute is monolithic's second stall).
+    SLO budgets are expressed in decode *steps* (multiples of the
+    warmed monolithic p50 step) so the goodput contract is
+    machine-speed independent. Token identity chunked == monolithic is
+    asserted in both modes — chunking and preemption move work, never
+    tokens."""
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import ServingEngine
+    from repro.serve.load import make_slo_requests
+
+    # mid-size so the long-prompt prefill stall is compute, not dispatch
+    cfg = dataclasses.replace(
+        get_config(arch).reduced(),
+        num_layers=4, d_model=128, d_ff=384, n_heads=4, n_kv_heads=2, head_dim=32,
+    )
+    model = Model(cfg)
+    params, _ = model.init(jax.random.key(seed))
+    # headroom for the pow2-bucketed resume prefill of a preempted long
+    # request (effective prompt up to long_len + tokens - 1 → next pow2)
+    max_seq = 2 * long_len + 2 * block_size
+    max_seq += (-max_seq) % block_size
+    if num_blocks is None:
+        if overload:
+            # one long admission (ceil((long_len + tokens)/bs) blocks)
+            # plus ~1.5 shorts: the next high-priority arrival finds the
+            # pool dry and must evict the long — preemption by design
+            num_blocks = (long_len + tokens + block_size - 1) // block_size + 3
+        else:
+            num_blocks = max_batch * (max_seq // block_size)
+
+    engine = ServingEngine(
+        model, params, max_seq=max_seq, kv_layout="paged",
+        block_size=block_size, num_blocks=num_blocks,
+    )
+
+    def workload(rng_seed):
+        return make_slo_requests(
+            n_requests, rate_rps, vocab=cfg.vocab_size, max_new_tokens=tokens,
+            short_lens=short_lens, long_len=long_len,
+            rng=np.random.default_rng(rng_seed),
+        )
+
+    # pre-compile the chunk trace family (closed: pow2 buckets ≤
+    # chunk_size) so a resume tail hitting a fresh bucket mid-window
+    # can't charge its compile to the chunked p99 — the monolithic
+    # stall being measured is prefill COMPUTE, and the comparison
+    # should be too
+    engine.scheduler(max_batch, seed=seed, chunk_size=chunk_size).prime()
+
+    results, outputs, requests = {}, {}, {}
+    slo_ms = None
+    for mode, chunk in (("monolithic", 0), ("chunked", chunk_size)):
+        engine.serve(workload(seed), max_batch=max_batch, seed=seed,
+                     chunk_size=chunk)  # warm jit caches on the same arrivals
+        if slo_ms is None:
+            # budget in steps × the warmed monolithic median step: the
+            # same absolute targets then price both modes
+            base = engine.stats.percentile(50)
+            slo_ms = (ttft_slo_steps * base, tpot_slo_steps * base)
+        reqs = workload(seed)
+        out = engine.serve(reqs, max_batch=max_batch, seed=seed, chunk_size=chunk)
+        assert all(r.finished for r in reqs), f"{mode}: starved requests"
+        results[mode] = dict(
+            engine.stats.serving_summary(),
+            goodput=_goodput(reqs, slo_ms[0], slo_ms[1]),
+        )
+        outputs[mode] = [np.asarray(out[r.rid]) for r in reqs]
+        requests[mode] = reqs
+
+    for a, b in zip(outputs["monolithic"], outputs["chunked"]):
+        np.testing.assert_array_equal(
+            a, b, err_msg="chunked prefill changed the decoded tokens"
+        )
+    if overload:
+        assert results["chunked"]["preemptions"] > 0, (
+            "overload pool produced no preemptions — pressure knobs too loose"
+        )
+        assert results["chunked"]["goodput"] > 0, "no request met the SLO"
+        assert (
+            results["chunked"]["p99_step_ms"] < results["monolithic"]["p99_step_ms"]
+        ), "chunking did not cut the p99 decode step"
+
+    ratio = (
+        results["monolithic"]["p99_step_ms"] / results["chunked"]["p99_step_ms"]
+        if results["chunked"]["p99_step_ms"]
+        else 0.0
+    )
+    summary = {
+        "arch": arch,
+        "chunk_size": chunk_size,
+        "overload": overload,
+        "rate_rps": rate_rps,
+        "long_len": long_len,
+        "block_size": block_size,
+        "num_blocks": num_blocks,
+        "ttft_slo_ms": slo_ms[0],
+        "tpot_slo_ms": slo_ms[1],
+        "monolithic": results["monolithic"],
+        "chunked": results["chunked"],
+        "p99_step_ratio": ratio,
+    }
+    print_fn("# serving — chunked prefill + priority/preemption SLO goodput")
+    print_fn(
+        f"arch={arch} requests={n_requests} rate={rate_rps}/s pool={max_batch} "
+        f"blocks={num_blocks}x{block_size} chunk={chunk_size} "
+        f"overload={overload} slo: ttft<={slo_ms[0]:.1f}ms tpot<={slo_ms[1]:.1f}ms"
+    )
+    for mode in ("monolithic", "chunked"):
+        s = results[mode]
+        print_fn(
+            f"{mode:10s} goodput={s['goodput']:.2f} "
+            f"ttft p99={s['p99_ttft_ms']:.1f}ms "
+            f"step p50={s['p50_step_ms']:.2f}ms p99={s['p99_step_ms']:.2f}ms | "
+            f"preempt={s['preemptions']} recompute={s['recomputed_tokens']}tok "
+            f"qwait p99={s['p99_queue_wait_ms'] or 0:.1f}ms"
+        )
+    print_fn(f"p99 step: monolithic/chunked = {ratio:.1f}x")
+    return summary
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -447,6 +624,12 @@ if __name__ == "__main__":
                     help="attention-backend mode: serve both KV layouts through "
                          "NAME and the reference backend, asserting token "
                          "identity (CI kernel smoke: --backend interpret)")
+    ap.add_argument("--chunked", action="store_true",
+                    help="SLO-goodput mode: chunked vs monolithic prefill on "
+                         "the mixed-priority workload")
+    ap.add_argument("--overload", action="store_true",
+                    help="with --chunked: under-provision the paged pool so "
+                         "preemption fires (CI overload smoke)")
     args = ap.parse_args()
     if args.shared_prefix:
         run_shared_prefix()
@@ -454,5 +637,7 @@ if __name__ == "__main__":
         run_speculative()
     elif args.backend:
         run_backend_sweep(backends=("reference", args.backend))
+    elif args.chunked:
+        run_slo(overload=args.overload)
     else:
         run()

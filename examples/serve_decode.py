@@ -28,9 +28,15 @@ kernel code interpreted on CPU (token-identical by the CI differential
 contract), and ``auto`` (default) resolves per platform via the ops
 registry (``REPRO_ATTENTION_BACKEND`` overrides).
 
+``--chunk N`` turns on chunked prefill in open-loop mode: at most N
+prompt tokens of prefill are admitted per decode step, so a long
+prompt's prefill interleaves with running decodes instead of stalling
+them (DESIGN.md §3.3; token streams are unchanged by construction).
+
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
       [--int8-kv] [--paged] [--spec 4] [--tokens 32] [--batch 4]
       [--aira] [--open-loop 8] [--rate 20] [--backend interpret]
+      [--chunk 16]
 """
 import argparse
 import dataclasses
@@ -66,6 +72,11 @@ def main():
                     help="serve N Poisson-arrival requests instead of one fixed batch")
     ap.add_argument("--rate", type=float, default=20.0,
                     help="open-loop arrival rate (requests/second)")
+    ap.add_argument("--chunk", type=int, default=0, metavar="N",
+                    help="chunked prefill: admit at most N prompt tokens of "
+                         "prefill per decode step (pow2; 0 = monolithic). "
+                         "Long prompts stop stalling co-resident decodes "
+                         "(DESIGN.md §3.3)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -111,7 +122,7 @@ def main():
             max_new_tokens=args.tokens,
             rng=np.random.default_rng(0),
         )
-        outputs = engine.serve(reqs, max_batch=args.batch)
+        outputs = engine.serve(reqs, max_batch=args.batch, chunk_size=args.chunk)
         for r in reqs:
             print(
                 f"  req {r.rid}: arrive={r.arrival_time*1e3:7.1f}ms "

@@ -474,6 +474,11 @@ def attention_block(
     accumulation is independent of which query rows run, so suffix rows
     come out bitwise-identical to a cold full-prompt prefill.
     Decode: x is [B,1,D]; cache = (k,v) [B,Smax,KV,hd]; cache_len [B].
+    Chunked prefill rides the decode-cache path with S=W queries: the
+    verify-style per-query mask (``pos < cache_len + t + 1``) is exactly
+    the causal mask at a running data offset, so each chunk attends over
+    earlier-chunk KV + itself — same math as the ``prefix_kv`` branch,
+    with the prefix read from the cache instead of concatenated.
     Paged decode/verify: cache is a dict {k, v[, k_scale, v_scale],
     tables, li} of layer-stacked pool leaves [L,NB,BS,KV,hd] plus the
     per-row block tables — the new token rows scatter into each row's

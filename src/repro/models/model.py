@@ -10,6 +10,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
@@ -49,6 +50,34 @@ PREFIX_FAMILIES = ("dense", "audio")
 # token verify could route (and drop) differently than the sequential
 # decode it must reproduce token-for-token.
 SPEC_FAMILIES = ("dense", "audio", "vlm")
+
+# Families whose prefill may be right-padded to a bucketed shape without
+# changing tokens: position-addressable KV caches ignore pad rows (pad
+# keys sit at positions strictly after every real query, so the causal
+# mask removes them; pad KV rows past ``len`` are masked off and
+# overwritten by later writes). SSM/hybrid are out — recurrent state
+# integrates every position, pads included — and MoE is out because
+# dispatch capacity depends on tokens-per-call, so padding changes which
+# tokens get dropped.
+PAD_PREFILL_FAMILIES = ("dense", "audio", "vlm")
+
+# Families the chunked (incremental) prefill supports: one
+# ``prefill_chunk`` call per ``chunk_size``-token slice of the prompt,
+# riding the verify_step machinery (per-query causal masking at a data
+# offset). Same exclusions as PREFIX_FAMILIES — chunk c>1 queries attend
+# over cached earlier-chunk KV exactly like a suffix prefill over a
+# prefix hit — plus VLM (patch embeddings are not token-chunkable).
+CHUNKED_PREFILL_FAMILIES = ("dense", "audio")
+
+
+def prefill_bucket(n: int, cap: Optional[int] = None) -> int:
+    """Smallest power of two ≥ ``n`` (≥ 1), clamped to ``cap``.
+
+    The prefill trace family: padding prompts (and prefill chunks) up to
+    pow2 buckets means mixed-length open-loop workloads compile one
+    prefill executable per bucket, not one per distinct length."""
+    w = 1 << max(0, int(n) - 1).bit_length()
+    return min(w, cap) if cap is not None else w
 
 # baseline switch (launch.dryrun --legacy): pre-optimization decode scan
 # slices the cache per layer via xs/ys, which writes a full layer-cache
@@ -797,15 +826,36 @@ class Model:
         return x, {"ssm_state": new_sts, "k": ks, "v": vs, "len": cache["len"] + 1}
 
     # ------------------------------------------------------------------
-    def prefill(self, params, tokens, max_seq, patch_embeds=None):
-        """Run the prompt, return (next-token logits [B,V], filled cache)."""
+    def prefill(self, params, tokens, max_seq, patch_embeds=None, prompt_len=None):
+        """Run the prompt, return (next-token logits [B,V], filled cache).
+
+        ``prompt_len`` [B] (optional) marks per-row effective prompt
+        lengths when ``tokens`` is right-padded to a pow2 bucket
+        (``prefill_bucket``): logits come from each row's last *real*
+        token and ``cache["len"]`` becomes a per-row vector, so pad
+        rows never commit. Pad keys sit at positions strictly after
+        every real query, so causal masking makes the padded run
+        bitwise-identical to the unpadded one for
+        ``PAD_PREFILL_FAMILIES``."""
         cfg = self.cfg
+        if prompt_len is not None and cfg.family not in PAD_PREFILL_FAMILIES:
+            raise ValueError(
+                f"padded prefill is only token-identical for "
+                f"{PAD_PREFILL_FAMILIES}, got {cfg.family!r} (recurrent state "
+                "integrates pad positions; MoE capacity depends on tokens-per-call)"
+            )
         x, _, caches = self.forward(
             params, tokens, patch_embeds=patch_embeds, want_cache=True
         )
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-        logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
         B, S = x.shape[0], x.shape[1]
+        if prompt_len is None:
+            x_last = x[:, -1]
+        else:
+            n_lead = S - tokens.shape[1]  # VLM patch rows lead the tokens
+            idx = n_lead + jnp.asarray(prompt_len, jnp.int32) - 1
+            x_last = x[jnp.arange(B), idx]
+        logits = jnp.einsum("bd,dv->bv", x_last, head)
         cache = self.init_cache(B, max_seq)
 
         def fill_kv(cache, k, v):
@@ -834,10 +884,18 @@ class Model:
             cache["ssm_state"] = jax.tree.map(
                 lambda s: s.reshape((cfg.num_layers,) + s.shape[2:]), sts
             )
-        cache["len"] = jnp.full_like(cache["len"], S)
+        if prompt_len is None:
+            cache["len"] = jnp.full_like(cache["len"], S)
+        else:
+            n_lead = S - tokens.shape[1]
+            cache["len"] = (n_lead + jnp.asarray(prompt_len, jnp.int32)).astype(
+                cache["len"].dtype
+            )
         return logits, cache
 
-    def prefill_with_prefix(self, params, tokens, prefix_k, prefix_v, max_seq):
+    def prefill_with_prefix(
+        self, params, tokens, prefix_k, prefix_v, max_seq, suffix_len=None
+    ):
         """Suffix prefill over an already-cached prompt prefix.
 
         ``tokens`` [B, Ssuf] are the prompt tokens *after* the cached
@@ -891,7 +949,13 @@ class Model:
         )
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-        logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+        if suffix_len is None:
+            x_last = x[:, -1]
+        else:
+            # tokens right-padded to a bucket: last *real* suffix row
+            idx = jnp.asarray(suffix_len, jnp.int32) - 1
+            x_last = x[jnp.arange(B), idx]
+        logits = jnp.einsum("bd,dv->bv", x_last, head)
         cache = self.init_cache(B, max_seq)
         if cfg.kv_quant:
             kq, ks = attn.quantize_kv(k)
@@ -903,5 +967,70 @@ class Model:
         else:
             cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
             cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
-        cache["len"] = jnp.full_like(cache["len"], h + Ssuf)
+        if suffix_len is None:
+            cache["len"] = jnp.full_like(cache["len"], h + Ssuf)
+        else:
+            cache["len"] = (h + jnp.asarray(suffix_len, jnp.int32)).astype(
+                cache["len"].dtype
+            )
         return logits, cache
+
+    # ------------------------------------------------------------------
+    # chunked prefill (serve/scheduler.py token-budget step loop)
+    def prefill_chunk(self, params, cache, tokens, n_valid, *, backend=None):
+        """One chunk of an incremental prefill: run ``tokens`` [B, W]
+        (right-padded to the pow2 bucket W) against a partially filled
+        dense cache and commit ``n_valid`` [B] new rows.
+
+        This IS the speculative ``verify_step`` — W queries attend over
+        cached earlier-chunk KV plus themselves via the same per-query
+        causal mask at a data offset (``pos < len + t + 1``) — except
+        the length advance is ``n_valid`` (data) instead of W (shape),
+        so pad rows never commit: their K/V land past the new ``len``,
+        masked off and overwritten by the next chunk. One jit trace per
+        bucket W; chunk position is data (``cache['len']``), so walking
+        a prompt never retraces. Returns (logits [B, W, V], new cache);
+        ``logits[b, n_valid[b]-1]`` predicts the token after the last
+        real chunk token. ``CHUNKED_PREFILL_FAMILIES`` only."""
+        if self.cfg.family not in CHUNKED_PREFILL_FAMILIES:
+            raise ValueError(
+                f"chunked prefill is only token-identical for "
+                f"{CHUNKED_PREFILL_FAMILIES}, got {self.cfg.family!r}"
+            )
+        logits, new_cache = self.verify_step(params, cache, tokens, backend=backend)
+        new_cache["len"] = (
+            cache["len"] + jnp.asarray(n_valid, jnp.int32)
+        ).astype(cache["len"].dtype)
+        return logits, new_cache
+
+    def seed_cache_with_prefix(self, prefix_k, prefix_v, max_seq):
+        """Dense batch-1 cache pre-loaded with a prefix-cache hit, ready
+        for ``prefill_chunk`` to continue at ``len = h``.
+
+        ``prefix_k``/``prefix_v`` [L, 1, h, KV, hd] arrive dequantized
+        (``gather_prefix``); int8 configs requantize on write — the
+        round-trip is exact (the max-|x| element pins each scale), so
+        the seeded rows match the pool bitwise. Host-side glue, not
+        jitted: runs once per admission, shapes vary with h."""
+        cfg = self.cfg
+        if cfg.family not in PREFIX_FAMILIES:
+            raise ValueError(
+                f"prefix seeding is only token-identical for {PREFIX_FAMILIES}, "
+                f"got {cfg.family!r}"
+            )
+        h = prefix_k.shape[2]
+        cache = self.init_cache(prefix_k.shape[1], max_seq)
+        if cfg.kv_quant:
+            kq, ks = attn.quantize_kv(jnp.asarray(prefix_k))
+            vq, vs = attn.quantize_kv(jnp.asarray(prefix_v))
+            seeds = (("k", kq), ("k_scale", ks), ("v", vq), ("v_scale", vs))
+        else:
+            seeds = (("k", prefix_k), ("v", prefix_v))
+        # assemble on the host: h varies per admission, and a per-h
+        # XLA update-slice would compile inside the serving window
+        for name, val in seeds:
+            buf = np.zeros(cache[name].shape, cache[name].dtype)
+            buf[:, :, :h] = np.asarray(val)
+            cache[name] = jnp.asarray(buf)
+        cache["len"] = jnp.full_like(cache["len"], h)
+        return cache

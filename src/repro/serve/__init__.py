@@ -1,7 +1,11 @@
 from repro.serve.block import BlockAllocator, PrefixCache  # noqa: F401
 from repro.serve.engine import ServingEngine  # noqa: F401
 from repro.serve.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
-from repro.serve.load import make_requests, make_shared_prefix_requests  # noqa: F401
+from repro.serve.load import (  # noqa: F401
+    make_requests,
+    make_shared_prefix_requests,
+    make_slo_requests,
+)
 from repro.serve.request import Request, ServeStats  # noqa: F401
 from repro.serve.scheduler import Scheduler  # noqa: F401
 from repro.serve.speculative import (  # noqa: F401

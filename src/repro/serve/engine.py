@@ -71,6 +71,7 @@ class ServingEngine:
         prefix_cache: bool = True,
         spec=None,
         attention_backend: Optional[str] = None,
+        chunk_size: Optional[int] = None,
     ):
         self.model = model
         self.params = params
@@ -82,6 +83,7 @@ class ServingEngine:
         self.num_blocks = num_blocks
         self.prefix_cache = prefix_cache
         self.spec = spec  # default SpecConfig for serve()/scheduler()
+        self.chunk_size = chunk_size  # default chunked-prefill token budget
         # the decode/verify attention backend is resolved ONCE, here,
         # before anything is jitted (DESIGN.md §4): each backend gets its
         # own statically-bound jitted step family in ``self._steps``, so
@@ -116,7 +118,9 @@ class ServingEngine:
         if self._prefill_prefix is None:
             model, max_seq = self.model, self.max_seq
             self._prefill_prefix = jax.jit(
-                lambda p, t, pk, pv: model.prefill_with_prefix(p, t, pk, pv, max_seq)
+                lambda p, t, pk, pv, **kw: model.prefill_with_prefix(
+                    p, t, pk, pv, max_seq, **kw
+                )
             )
         return fns["decode_paged"], self._prefill_prefix
 
@@ -231,6 +235,7 @@ class ServingEngine:
         kv_layout: Optional[str] = None,
         spec=None,
         attention_backend: Optional[str] = None,
+        chunk_size: Optional[int] = None,
     ) -> Scheduler:
         """A fresh continuous-batching scheduler over ``max_batch`` rows
         (slots, or paged block tables), sharing this engine's stats,
@@ -238,9 +243,12 @@ class ServingEngine:
         default ``SpecConfig`` (``SpecConfig(k=0)`` disables);
         ``attention_backend`` overrides the engine default — each
         backend's jitted step family is cached separately, so switching
-        is retrace-free after first use."""
+        is retrace-free after first use. ``chunk_size`` overrides the
+        engine's chunked-prefill budget (``0`` disables for this call)."""
         layout = kv_layout or self.kv_layout
         spec = spec if spec is not None else self.spec
+        chunk = chunk_size if chunk_size is not None else self.chunk_size
+        chunk = None if not chunk else int(chunk)
         backend = kernel_ops.resolve_attention_backend(
             attention_backend or self.attention_backend
         )
@@ -266,6 +274,11 @@ class ServingEngine:
         if spec is not None and spec.k > 0:
             verify, verify_paged = self._spec_fns(layout, backend)
             paged_kw.update(verify_fn=verify, paged_verify_fn=verify_paged)
+        if chunk is not None:
+            fns = self._step_fns(backend)
+            if "prefill_chunk" not in fns:
+                fns["prefill_chunk"] = self.model.jit_step("prefill_chunk", backend)
+            paged_kw.update(chunk_prefill_fn=fns["prefill_chunk"])
         return Scheduler(
             self.model,
             self.params,
@@ -278,6 +291,7 @@ class ServingEngine:
             kv_layout=layout,
             spec=spec,
             attention_backend=backend,
+            chunk_size=chunk,
             prefill_fn=self._prefill,
             decode_fn=self._step_fns(backend)["decode"],
             plan_step_cache=self._plan_steps,
@@ -293,19 +307,21 @@ class ServingEngine:
         kv_layout: Optional[str] = None,
         spec=None,
         attention_backend: Optional[str] = None,
+        chunk_size: Optional[int] = None,
     ) -> dict:
         """Continuous-batching entry: drive ``requests`` (each with its
         own arrival time, prompt length, and token budget) to completion
         through a slotted or block-paged pool, optionally speculating
         ``spec.k`` draft tokens per verify (greedy streams unchanged —
-        ``spec`` usually comes from ``speculative.advise_depth``) and
-        optionally overriding the attention backend for this run.
-        Returns rid → generated tokens."""
+        ``spec`` usually comes from ``speculative.advise_depth``),
+        optionally overriding the attention backend for this run, and
+        optionally chunking prefill (``chunk_size`` tokens per step;
+        ``0`` forces monolithic). Returns rid → generated tokens."""
         requests = list(requests)
         mb = max_batch or self.max_batch or max(1, min(8, len(requests)))
         return self.scheduler(
             mb, seed=seed, kv_layout=kv_layout, spec=spec,
-            attention_backend=attention_backend,
+            attention_backend=attention_backend, chunk_size=chunk_size,
         ).run(requests)
 
     def _sample(self, logits, key):

@@ -121,6 +121,13 @@ class SlotKVCache:
         self.cache["len"] = jnp.maximum(self.cache["len"] - vec, 0)
 
     # ------------------------------------------------------------------
+    # preemption (uniform scheduler call; the slotted layout has no
+    # prefix trie, so eviction just frees — resume is a cold re-prefill)
+    def preempt_row(self, slot: int, tokens=None) -> None:
+        del tokens  # no trie to register committed work into
+        self.free(slot)
+
+    # ------------------------------------------------------------------
     def check_invariants(self) -> None:
         """Free slots and live slots partition the pool; the free list is
         sorted and duplicate-free (used by the property tests)."""
@@ -238,13 +245,24 @@ class PagedKVCache:
             return []
         return self.prefix.match(tokens)
 
-    def try_admit(self, rid: int, tokens, budget: int, n_tokens: Optional[int] = None):
+    def try_admit(
+        self,
+        rid: int,
+        tokens,
+        budget: int,
+        n_tokens: Optional[int] = None,
+        register: bool = True,
+    ):
         """Admit ``rid`` into a free row if the block budget fits:
         returns (row, hit_ids) or None. Shared prefix blocks alias
         (refcount++); fresh prompt blocks are allocated now; the decode
         tail is only *reserved* (allocated lazily by ``ensure_tail``).
         ``n_tokens`` overrides the cache-row count when the prefill
-        occupies more rows than ``tokens`` (VLM patch embeddings)."""
+        occupies more rows than ``tokens`` (VLM patch embeddings).
+        ``register=False`` defers trie registration (chunked prefill:
+        the prompt blocks hold no KV yet at admission — the scheduler
+        calls ``register_prompt`` once the last chunk has committed, so
+        a concurrent admission can never alias half-written blocks)."""
         if not self._row_free:
             return None
         S = len(tokens) if n_tokens is None else int(n_tokens)
@@ -269,11 +287,24 @@ class PagedKVCache:
         self._outstanding_total += self._row_outstanding[row]
         self.block_tables[row, : len(blocks)] = blocks
         self.cache_len[row] = S
-        if self.prefix is not None and len(tokens) == S:
+        if register and self.prefix is not None and len(tokens) == S:
             # register the prompt's immutable full blocks (decode never
             # writes before position S, so blocks < S // bs stay frozen)
             self.prefix.insert(tokens, blocks[: S // self.block_size])
         return row, hit_ids
+
+    def register_prompt(self, row: int, tokens) -> None:
+        """Register a live row's now-written prompt blocks in the trie
+        (the deferred half of ``try_admit(register=False)``). ``tokens``
+        must be the prompt whose KV the row's leading blocks hold."""
+        if self._row_owner[row] is None:
+            raise RuntimeError(f"register_prompt on free row {row}")
+        if self.prefix is None:
+            return
+        n_full = min(len(tokens) // self.block_size, len(self._row_blocks[row]))
+        if n_full:
+            self.prefix.insert(tuple(tokens)[: n_full * self.block_size],
+                               self._row_blocks[row][:n_full])
 
     # ------------------------------------------------------------------
     # cache I/O
@@ -299,7 +330,14 @@ class PagedKVCache:
         prefill always sees dense K/V whatever the cache dtype."""
         from repro.models import attention as attn
 
-        table = jnp.asarray(np.array(hit_ids, np.int32)[None, :])
+        # pad the chain to blocks_per_row (repeating the last id) so the
+        # gather runs at ONE fixed shape whatever the hit length — hit
+        # lengths vary request to request, and a per-length eager
+        # compile would land in the serving window; the padded tail is
+        # sliced off on the host
+        h = len(hit_ids) * self.block_size
+        ids = list(hit_ids) + [hit_ids[-1]] * (self.blocks_per_row - len(hit_ids))
+        table = jnp.asarray(np.array(ids, np.int32)[None, :])
         k = attn.gather_block_rows(self.pool["k"], table)
         v = attn.gather_block_rows(self.pool["v"], table)
         if self.model.cfg.kv_quant:
@@ -310,7 +348,7 @@ class PagedKVCache:
             v = attn.dequantize_kv(
                 v, attn.gather_block_rows(self.pool["v_scale"], table), dt
             )
-        return k, v
+        return np.asarray(k)[:, :, :h], np.asarray(v)[:, :, :h]
 
     def write_prefill(self, row: int, dense_cache, skip_blocks: int = 0) -> None:
         """Install a request's batch=1 dense prefill cache into its fresh
@@ -324,14 +362,23 @@ class PagedKVCache:
         ids = self._row_blocks[row][skip_blocks:n_prompt]
         if not ids:
             return
-        idx = jnp.asarray(np.array(ids, np.int32))
+        # one fixed-shape scatter per pool leaf: the index vector is
+        # padded to blocks_per_row by repeating the last block id with
+        # its own (identical) payload, so every install — any prompt
+        # length, any prefix-hit skip — reuses the same compiled op
+        # instead of paying an eager compile per (skip, n) combination
+        pad = self.blocks_per_row - len(ids)
+        idx = jnp.asarray(np.array(list(ids) + [ids[-1]] * pad, np.int32))
         for name, leaf in self.pool.items():
-            d = dense_cache[name]  # [L, 1, S_dense, ...]
+            d = np.asarray(dense_cache[name])  # [L, 1, S_dense, ...]
             L, _, Sd = d.shape[:3]
             blocks = d.reshape((L, Sd // bs, bs) + d.shape[3:])
-            self.pool[name] = leaf.at[:, idx].set(
-                blocks[:, skip_blocks:n_prompt].astype(leaf.dtype)
-            )
+            src = blocks[:, skip_blocks:n_prompt]
+            if pad:
+                src = np.concatenate(
+                    [src, np.repeat(src[:, -1:], pad, axis=1)], axis=1
+                )
+            self.pool[name] = leaf.at[:, idx].set(jnp.asarray(src.astype(leaf.dtype)))
 
     def ensure_tail(self, row: int) -> None:
         """Make sure the row's next decode write position has a physical
@@ -409,6 +456,29 @@ class PagedKVCache:
         self.block_tables[row, :] = self.null_block
         self.cache_len[row] = 0
         bisect.insort(self._row_free, row)
+
+    def preempt_row(self, row: int, tokens=None) -> None:
+        """Evict a live row under block pressure, keeping its work.
+
+        ``tokens`` (prompt + committed generated tokens) registers the
+        row's full blocks in the prefix trie *before* the row frees, so
+        they park instead of vanishing: resumption prefix-matches the
+        whole committed history and recomputes only the partial tail
+        block — suffix-only recompute, not a cold prefill. Blocks whose
+        chain already exists in the trie keep their first registration
+        (``PrefixCache.insert`` dedups); such duplicates stay private
+        and return to the free list. Without ``tokens`` (or without a
+        trie) this is a plain eviction."""
+        if self._row_owner[row] is None:
+            raise RuntimeError(f"preempt of free row {row}")
+        if self.prefix is not None and tokens is not None:
+            n_full = min(len(tokens) // self.block_size, len(self._row_blocks[row]))
+            if n_full:
+                self.prefix.insert(
+                    tuple(tokens)[: n_full * self.block_size],
+                    self._row_blocks[row][:n_full],
+                )
+        self.free_row(row)
 
     def drop_cached(self) -> int:
         """Evict every parked (cached, unreferenced) block — test/ops

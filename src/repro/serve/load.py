@@ -42,6 +42,44 @@ def make_requests(
     return reqs
 
 
+def make_slo_requests(
+    n: int,
+    rate_rps: float,
+    *,
+    vocab: int,
+    max_new_tokens: int,
+    short_lens=(8, 16),
+    long_len: int = 96,
+    long_every: int = 4,
+    short_priority: int = 1,
+    long_priority: int = 0,
+    rng: np.random.Generator,
+):
+    """The SLO-attainment workload: Poisson arrivals where every
+    ``long_every``-th request is a long, low-priority prompt and the
+    rest are short, high-priority interactive requests. The long
+    prompts are the monolithic-prefill stall generators (and, under
+    block pressure, the preemption victims) whose impact on the short
+    requests' TTFT/TPOT the ``serving.slo`` benchmark measures."""
+    from repro.serve.request import Request
+
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    reqs = []
+    for i in range(n):
+        long = long_every > 0 and i % long_every == long_every - 1
+        s0 = int(long_len) if long else int(rng.choice(short_lens))
+        prompt = rng.integers(0, vocab, size=(s0,)).astype(np.int32)
+        reqs.append(
+            Request(
+                prompt=prompt,
+                max_new_tokens=int(max_new_tokens),
+                arrival_time=float(arrivals[i]),
+                priority=int(long_priority if long else short_priority),
+            )
+        )
+    return reqs
+
+
 def make_shared_prefix_requests(
     n: int,
     rate_rps: float,

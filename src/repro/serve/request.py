@@ -4,10 +4,13 @@ A ``Request`` is the schedulable unit the paper's task-queue analogy
 maps onto at serving scale: where Relic splits a hotspot into microtasks
 cheap enough to co-schedule, the serving layer splits traffic into
 requests cheap enough to admit and retire individually (DESIGN.md §3).
-States move queued → prefill → decode → finished; the scheduler owns
-every transition. Latency accounting is per-request — TTFT (arrival to
-first token, including queueing), TPOT (decode time per subsequent
-token), and end-to-end — aggregated across a run by ``ServeStats``.
+States move queued → prefill → decode → finished, with a preempted
+detour (decode → preempted → prefill) when block pressure evicts a
+low-priority row; the scheduler owns every transition. Latency
+accounting is per-request — TTFT (arrival to first token, including
+queueing), queue wait (arrival to first admission, the scheduler-owned
+part of TTFT), TPOT (decode time per subsequent token), and end-to-end
+— aggregated across a run by ``ServeStats``.
 
 All times are seconds on the scheduler's run clock (0 = run start), so
 ``arrival_time`` doubles as the open-loop load generator's injection
@@ -24,12 +27,13 @@ import numpy as np
 QUEUED = "queued"
 PREFILL = "prefill"
 DECODE = "decode"
+PREEMPTED = "preempted"
 FINISHED = "finished"
 
 _RID = itertools.count()
 
 
-@dataclass
+@dataclass(eq=False)  # identity semantics: requests are mutable and unique
 class Request:
     """One generation request: a prompt, a token budget, an arrival time."""
 
@@ -38,6 +42,7 @@ class Request:
     arrival_time: float = 0.0  # seconds from run start (open-loop schedule)
     eos_id: Optional[int] = None  # early finish on this token
     patch_embeds: Any = None  # [P, D] VLM frontend embeddings
+    priority: int = 0  # higher = more important (strict-priority admission)
     rid: int = field(default_factory=lambda: next(_RID))
 
     # lifecycle — owned by the scheduler
@@ -48,6 +53,10 @@ class Request:
     t_admit: Optional[float] = None  # prefill started (slot allocated)
     t_first: Optional[float] = None  # first token available
     t_finish: Optional[float] = None
+    # preempt/resume — owned by the scheduler
+    preemptions: int = 0  # times this request was evicted mid-decode
+    sample_key: Any = None  # per-row PRNG key saved across preemption
+    t_first_admit: Optional[float] = None  # first admission (queue wait ends)
 
     @property
     def finished(self) -> bool:
@@ -64,6 +73,21 @@ class Request:
         if self.t_first is None:
             return None
         return (self.t_first - self.arrival_time) * 1e3
+
+    @property
+    def queue_wait_ms(self) -> Optional[float]:
+        """Arrival → first admission: the scheduler-owned slice of TTFT
+        (load + priority), as opposed to prefill compute."""
+        if self.t_first_admit is None:
+            return None
+        return (self.t_first_admit - self.arrival_time) * 1e3
+
+    @property
+    def service_ttft_ms(self) -> Optional[float]:
+        """First admission → first token: TTFT with queueing split out."""
+        if self.t_first is None or self.t_first_admit is None:
+            return None
+        return (self.t_first - self.t_first_admit) * 1e3
 
     @property
     def e2e_ms(self) -> Optional[float]:
@@ -88,10 +112,17 @@ class ServeStats:
     ttft_ms: list = field(default_factory=list)
     tpot_ms: list = field(default_factory=list)
     e2e_ms: list = field(default_factory=list)
+    # queue-wait / service split of TTFT (queue_wait + service = ttft)
+    queue_wait_ms: list = field(default_factory=list)
+    service_ttft_ms: list = field(default_factory=list)
     # prefix-cache accounting (paged layout; zero on the slotted path)
     prompt_tokens: int = 0
     prefix_hit_tokens: int = 0
     n_prefix_hits: int = 0
+    # preemption accounting (priority scheduling under block pressure)
+    n_preemptions: int = 0
+    recomputed_tokens: int = 0  # prompt+generated tokens re-prefilled on resume
+    rejected_submissions: int = 0  # submit() refused (over-capacity request)
     # speculative-decode accounting (zero when speculation is off):
     # per-step latency split (draft stream vs target verify) plus the
     # proposed/accepted draft-token counters behind the acceptance rate
@@ -108,9 +139,14 @@ class ServeStats:
         self.ttft_ms.clear()
         self.tpot_ms.clear()
         self.e2e_ms.clear()
+        self.queue_wait_ms.clear()
+        self.service_ttft_ms.clear()
         self.prompt_tokens = 0
         self.prefix_hit_tokens = 0
         self.n_prefix_hits = 0
+        self.n_preemptions = 0
+        self.recomputed_tokens = 0
+        self.rejected_submissions = 0
         self.draft_ms.clear()
         self.verify_ms.clear()
         self.spec_k = 0
@@ -122,6 +158,10 @@ class ServeStats:
         """Fold a finished request's latencies into the run series."""
         if req.ttft_ms is not None:
             self.ttft_ms.append(req.ttft_ms)
+        if req.queue_wait_ms is not None:
+            self.queue_wait_ms.append(req.queue_wait_ms)
+        if req.service_ttft_ms is not None:
+            self.service_ttft_ms.append(req.service_ttft_ms)
         if req.tpot_ms is not None:
             self.tpot_ms.append(req.tpot_ms)
         if req.e2e_ms is not None:
@@ -176,11 +216,19 @@ class ServeStats:
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_hit_rate": self.prefix_hit_rate,
             "n_prefix_hits": self.n_prefix_hits,
+            "preemptions": self.n_preemptions,
+            "recomputed_tokens": self.recomputed_tokens,
+            "rejected_submissions": self.rejected_submissions,
         }
         if self.ttft_ms:
+            qw, sv = self.queue_wait_ms, self.service_ttft_ms
             out.update(
                 p50_ttft_ms=self.percentile(50, "ttft_ms"),
                 p99_ttft_ms=self.percentile(99, "ttft_ms"),
+                p50_queue_wait_ms=self.percentile(50, "queue_wait_ms") if qw else None,
+                p99_queue_wait_ms=self.percentile(99, "queue_wait_ms") if qw else None,
+                p50_service_ttft_ms=self.percentile(50, "service_ttft_ms") if sv else None,
+                p99_service_ttft_ms=self.percentile(99, "service_ttft_ms") if sv else None,
                 p50_tpot_ms=self.percentile(50, "tpot_ms") if self.tpot_ms else None,
                 p99_tpot_ms=self.percentile(99, "tpot_ms") if self.tpot_ms else None,
                 p50_e2e_ms=self.percentile(50, "e2e_ms"),
@@ -188,8 +236,11 @@ class ServeStats:
             )
         else:
             out.update(
-                p50_ttft_ms=None, p99_ttft_ms=None, p50_tpot_ms=None,
-                p99_tpot_ms=None, p50_e2e_ms=None, p99_e2e_ms=None,
+                p50_ttft_ms=None, p99_ttft_ms=None,
+                p50_queue_wait_ms=None, p99_queue_wait_ms=None,
+                p50_service_ttft_ms=None, p99_service_ttft_ms=None,
+                p50_tpot_ms=None, p99_tpot_ms=None,
+                p50_e2e_ms=None, p99_e2e_ms=None,
             )
         if self.spec_steps:
             out["speculative"] = {

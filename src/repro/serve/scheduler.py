@@ -2,21 +2,37 @@
 
 Each ``step()`` (the serving analogue of one Relic task-queue tick):
 
-  1. admits arrived queued requests — per-request prefill, written into
-     the pool, first token sampled from the prefill logits (that instant
-     is the request's TTFT). Slotted admission charges one slot per
-     request; paged admission charges *blocks* (worst case reserved,
-     physical blocks claimed lazily) and, on a prefix-cache hit,
-     prefills only the un-cached prompt suffix — shared blocks are
-     aliased, which is where the shared-prompt TTFT drop comes from;
-  2. runs ONE batched decode over the full fixed-shape row pool —
+  1. admits arrived queued requests in strict priority order — prefill
+     written into the pool, first token sampled from the prefill logits
+     (that instant is the request's TTFT). Slotted admission charges one
+     slot per request; paged admission charges *blocks* (worst case
+     reserved, physical blocks claimed lazily) and, on a prefix-cache
+     hit, prefills only the un-cached prompt suffix — shared blocks are
+     aliased, which is where the shared-prompt TTFT drop comes from.
+     When the pool is dry and the queue head outranks a live row, the
+     lowest-priority row is *preempted*: its committed full blocks
+     re-register in the prefix trie (paged), so resumption is a
+     suffix-only recompute, not a cold prefill;
+  2. with ``chunk_size`` set, spends at most ``chunk_size`` prompt
+     tokens of *chunked prefill* work — one ``prefill_chunk`` call per
+     in-flight prompt slice, highest-priority first — so a long prompt
+     never monopolizes a step: the paper's fine-grained co-scheduling
+     argument applied to the decode loop, where the batched decode is
+     the latency-critical stream and prefill is the heavy thread that
+     must be sliced to interleave (chunk position is data, one trace
+     per pow2 chunk bucket);
+  3. runs ONE batched decode over the full fixed-shape row pool —
      through the engine's accepted ``RegionPlan`` via masked execution
      when one is set (slotted layout), or through the block tables
      (paged layout) — so neither jit nor the plan retraces as the
      number of live requests changes (liveness, block tables, and
      per-row lengths are data, not shape);
-  3. samples the next token per live row, retires requests that hit
+  4. samples the next token per live row, retires requests that hit
      their token budget or EOS, and frees their slots/blocks.
+
+``step_ms`` times the whole step — admission + chunk work + decode —
+so a monolithic prefill stall lands in the step tail it actually
+causes (the ``serving.p99_step_ms`` the chunked mode exists to kill).
 
 With speculation on (``spec=SpecConfig(k>0)``), step 2 becomes ONE
 fused draft→verify round over the same fixed-shape pool: the draft
@@ -42,15 +58,42 @@ load a latency-critical server (closed-loop drivers hide queueing).
 from __future__ import annotations
 
 import time
-from typing import Optional
+from dataclasses import dataclass
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kernel_ops
+from repro.models.model import (
+    CHUNKED_PREFILL_FAMILIES,
+    PAD_PREFILL_FAMILIES,
+    prefill_bucket,
+)
 from repro.serve.kv_cache import PagedKVCache, SlotKVCache
-from repro.serve.request import DECODE, FINISHED, PREFILL, Request, ServeStats
+from repro.serve.request import (
+    DECODE,
+    FINISHED,
+    PREEMPTED,
+    PREFILL,
+    Request,
+    ServeStats,
+)
+
+
+@dataclass
+class _ChunkState:
+    """An in-flight chunked prefill: the request's private batch-1 dense
+    cache (seeded from a prefix hit when there was one) plus the cursor
+    into its effective prompt. Installed into the pool when ``pos``
+    reaches the end."""
+
+    req: Request
+    cache: Any  # batch-1 dense cache, len tracks committed chunk rows
+    prompt: np.ndarray  # effective prompt (prompt + committed tokens on resume)
+    pos: int  # next un-prefilled prompt position (starts at the prefix hit)
+    skip_blocks: int  # leading prefix-hit blocks write_prefill must not touch
 
 
 class Scheduler:
@@ -71,12 +114,14 @@ class Scheduler:
         prefix_cache: bool = True,
         spec=None,
         attention_backend: Optional[str] = None,
+        chunk_size: Optional[int] = None,
         prefill_fn=None,
         decode_fn=None,
         paged_decode_fn=None,
         prefix_prefill_fn=None,
         verify_fn=None,
         paged_verify_fn=None,
+        chunk_prefill_fn=None,
         plan_step_cache: Optional[dict] = None,
     ):
         self.model = model
@@ -108,9 +153,27 @@ class Scheduler:
         # choice can never leak between traces (DESIGN.md §4). Engine-
         # made schedulers receive already-bound fns instead.
         self.attention_backend = kernel_ops.resolve_attention_backend(attention_backend)
+        # pow2 prompt-shape bucketing (pad + mask): one prefill trace per
+        # bucket instead of one per distinct prompt length
+        self._bucket = model.cfg.family in PAD_PREFILL_FAMILIES
+        if chunk_size is not None:
+            chunk_size = int(chunk_size)
+            if chunk_size < 1 or chunk_size & (chunk_size - 1):
+                raise ValueError(
+                    f"chunk_size must be a power of two >= 1, got {chunk_size} "
+                    "(chunks pad to pow2 buckets; a non-pow2 cap would add a "
+                    "one-off trace per partial chunk)"
+                )
+            if model.cfg.family not in CHUNKED_PREFILL_FAMILIES:
+                raise ValueError(
+                    f"chunked prefill needs a {CHUNKED_PREFILL_FAMILIES} family "
+                    f"(length-addressed KV cache), got {model.cfg.family!r}"
+                )
+        self.chunk_size = chunk_size
         self.stats = stats if stats is not None else ServeStats()
-        self._queue: list[Request] = []  # sorted by (arrival_time, rid)
+        self._queue: list[Request] = []  # sorted by (-priority, arrival_time, rid)
         self._active: dict[int, Request] = {}  # row → request
+        self._chunking: dict[int, _ChunkState] = {}  # row → in-flight chunked prefill
         self._n_admitted = 0  # per-run sampling-key ordinal (not the global rid)
         self._ordinals: dict[int, int] = {}  # rid → ordinal, admission → first sample
         self._tok = jnp.zeros((max_batch,), jnp.int32)  # last token per row
@@ -126,9 +189,16 @@ class Scheduler:
             model.jit_step("decode_step_paged", be) if kv_layout == "paged" else None
         )
         self._prefill_prefix = prefix_prefill_fn or (
-            jax.jit(lambda p, t, pk, pv: model.prefill_with_prefix(p, t, pk, pv, max_seq))
+            jax.jit(
+                lambda p, t, pk, pv, **kw: model.prefill_with_prefix(
+                    p, t, pk, pv, max_seq, **kw
+                )
+            )
             if kv_layout == "paged"
             else None
+        )
+        self._prefill_chunk = chunk_prefill_fn or (
+            model.jit_step("prefill_chunk", be) if chunk_size is not None else None
         )
         # speculative decode: a draft stream + the fused verify step
         self.spec = spec if (spec is not None and spec.k > 0) else None
@@ -225,14 +295,27 @@ class Scheduler:
         entries past its final committed length."""
         return self.spec.k if self.spec is not None else 0
 
+    @staticmethod
+    def _queue_key(req: Request):
+        """Strict priority (higher first), then arrival, then rid."""
+        return (-req.priority, req.arrival_time, req.rid)
+
     def submit(self, req: Request) -> None:
         need = int(jnp.asarray(req.prompt).shape[0]) + req.max_new_tokens
         if req.patch_embeds is not None:
             need += int(jnp.asarray(req.patch_embeds).shape[0])
         need += self._spec_margin
+        if self.chunk_size is not None and req.patch_embeds is not None:
+            self.stats.rejected_submissions += 1
+            raise ValueError(
+                f"request {req.rid}: chunked prefill cannot split patch "
+                "embeddings (not token-addressable) — serve VLM requests "
+                "with chunk_size=None"
+            )
         if need > self.max_seq:
             # past max_seq the cache write clamps and silently corrupts
             # the newest KV entry — fail loudly at submission instead
+            self.stats.rejected_submissions += 1
             margin = (
                 f" (incl. speculative margin K={self._spec_margin})"
                 if self._spec_margin
@@ -244,10 +327,11 @@ class Scheduler:
             )
         if self.kv_layout == "paged":
             # a request whose block budget can never fit would sit at the
-            # queue head forever (admission is FIFO) — reject it loudly,
-            # in the block-granular currency admission actually charges
+            # queue head forever (admission is head-of-line) — reject it
+            # loudly, in the block currency admission actually charges
             nb = self.kv.blocks_for(need)
             if nb > self.kv.num_blocks:
+                self.stats.rejected_submissions += 1
                 raise ValueError(
                     f"request {req.rid}: needs {nb} KV blocks "
                     f"({need} tokens at block_size={self.kv.block_size}) but the "
@@ -256,7 +340,7 @@ class Scheduler:
                 )
         req.state = "queued"
         self._queue.append(req)
-        self._queue.sort(key=lambda r: (r.arrival_time, r.rid))
+        self._queue.sort(key=self._queue_key)
 
     def _sample_row(self, logits_row, key):
         if self.temperature <= 0.0:
@@ -280,43 +364,128 @@ class Scheduler:
         if len(req.tokens) >= req.max_new_tokens or tok0 == req.eos_id:
             self._retire(req, self._clock())
 
-    def _admit(self, reqs: list, now: float) -> None:
-        """Admit a wave of arrived requests into slots: same-shape prompts
-        prefill as ONE batched call (the fixed-batch ``generate()`` wave
-        is a single batch-B prefill, as before the scheduler existed),
-        each row then written into its own slot via ``read_cache_slot``."""
-        for req in reqs:
+    def _note_admitted(self, req: Request, now: float) -> None:
+        """Shared admission bookkeeping: queue wait ends at the FIRST
+        admission (re-admissions after preemption don't reset it); the
+        sampling-key ordinal is assigned once — a resumed request
+        continues its saved key chain instead."""
+        if req.t_first_admit is None:
+            req.t_first_admit = now
+        if not req.tokens:
             # key by the per-run admission ordinal, not the process-global
             # rid: the same seed reproduces the same tokens across runs
             self._ordinals[req.rid] = self._n_admitted
             self._n_admitted += 1
-            req.state, req.t_admit = PREFILL, now
+        req.state, req.t_admit = PREFILL, now
+
+    @staticmethod
+    def _effective_prompt(req: Request) -> np.ndarray:
+        """The tokens a (re-)prefill must commit: the prompt plus, on
+        resume, every generated token except the pending last one (the
+        invariant ``committed len = S + n - 1`` — the newest token is
+        fed to decode, never pre-written)."""
+        prompt = np.asarray(req.prompt)
+        if not req.tokens:
+            return prompt
+        return np.concatenate(
+            [prompt, np.asarray(req.tokens[:-1], prompt.dtype)]
+        ) if len(req.tokens) > 1 else prompt
+
+    def _resume_decode(self, req: Request, row: int, now: float) -> None:
+        """Re-arm a preempted request mid-stream: the pending token and
+        the saved per-row sampling key restore, so the continued decode
+        is token-identical to the uninterrupted run."""
+        del now
+        req.state = DECODE
+        self._tok = self._tok.at[row].set(int(req.tokens[-1]))
+        if req.sample_key is not None:
+            self._keys = self._keys.at[row].set(
+                jnp.asarray(np.asarray(req.sample_key), jnp.uint32)
+            )
+        self._active[row] = req
+
+    def _admit(self, reqs: list, now: float) -> None:
+        """Admit a wave of arrived requests into slots: same-bucket
+        prompts prefill as ONE batched call (pow2 padding makes mixed
+        lengths share both the call and the trace), each row then
+        written into its own slot via ``read_cache_slot``. Resumed
+        requests re-prefill their effective prompt (prompt + committed
+        tokens) and continue their stream."""
+        for req in reqs:
+            self._note_admitted(req, now)
         groups: dict = {}
         for req in reqs:
+            eff = self._effective_prompt(req)
             pe = None if req.patch_embeds is None else tuple(jnp.asarray(req.patch_embeds).shape)
-            groups.setdefault((int(jnp.asarray(req.prompt).shape[0]), pe), []).append(req)
-        for (_, pe), group in groups.items():
+            n_lead = 0 if pe is None else pe[0]
+            W = len(eff)
+            if self._bucket:
+                W = prefill_bucket(W)
+                if n_lead + W > self.max_seq:  # cache write would clamp
+                    W = len(eff)
+            groups.setdefault((W, pe), []).append((req, eff))
+        for (W, pe), group in groups.items():
             kw = {}
             if pe is not None:
-                kw["patch_embeds"] = jnp.stack([jnp.asarray(r.patch_embeds) for r in group])
-            prompts = jnp.stack([jnp.asarray(r.prompt) for r in group])
+                kw["patch_embeds"] = jnp.stack(
+                    [jnp.asarray(r.patch_embeds) for r, _ in group]
+                )
+            if self._bucket:
+                mat = np.zeros((len(group), W), np.int32)
+                for i, (_, eff) in enumerate(group):
+                    mat[i, : len(eff)] = eff
+                prompts = jnp.asarray(mat)
+                kw["prompt_len"] = jnp.asarray(
+                    [len(eff) for _, eff in group], jnp.int32
+                )
+            else:
+                prompts = jnp.stack([jnp.asarray(eff) for _, eff in group])
             logits, cache = self._prefill(self.params, prompts, **kw)
-            for i, req in enumerate(group):
+            for i, (req, eff) in enumerate(group):
                 slot = self.kv.alloc(req.rid)
                 req.slot = slot
                 self.kv.write(slot, self.model.read_cache_slot(cache, i))
-                self._start_decode(req, slot, logits[i], now)
+                if req.tokens:
+                    self.stats.recomputed_tokens += len(eff)
+                    self._resume_decode(req, slot, now)
+                else:
+                    self._start_decode(req, slot, logits[i], now)
                 if self._drafter is not None and not req.finished:
                     self._drafter.on_admit(slot, req)
 
+    def _start_chunk_slot(self, req: Request, now: float) -> None:
+        """Slotted chunked admission: claim the slot now, prefill later
+        in ``chunk_size`` slices. The slot's pool row holds junk until
+        the install (its decode outputs are ignored — the row is not in
+        ``_active`` — and ``kv.write`` overwrites everything)."""
+        self._note_admitted(req, now)
+        slot = self.kv.alloc(req.rid)
+        req.slot = slot
+        eff = self._effective_prompt(req)
+        if req.tokens:
+            self.stats.recomputed_tokens += len(eff)
+        self._chunking[slot] = _ChunkState(
+            req=req,
+            cache=self.model.init_cache(1, self.max_seq),
+            prompt=eff,
+            pos=0,
+            skip_blocks=0,
+        )
+
     def _try_admit_paged(self, req: Request, now: float) -> bool:
         """Paged admission, one request at a time: prefix-match the
-        prompt, charge the block budget, prefill only the un-cached
-        suffix on a hit. Returns False when the row/block budget does
-        not fit yet (the request stays queued)."""
-        prompt = np.asarray(req.prompt)
-        n_cache = len(prompt)
-        tokens = tuple(int(t) for t in prompt)
+        effective prompt, charge the block budget, prefill only the
+        un-cached suffix on a hit (a resumed request's committed blocks
+        re-registered at preemption, so its resume is usually one
+        partial tail block of recompute). Returns False when the
+        row/block budget does not fit yet (the request stays queued).
+        With chunking on, admission only *reserves*: the prompt runs
+        through ``_prefill_phase`` in ``chunk_size`` slices and the trie
+        registration waits until the blocks actually hold KV."""
+        resume = bool(req.tokens)
+        eff = self._effective_prompt(req)
+        n_cache = len(eff)
+        tokens = tuple(int(t) for t in eff)
         if req.patch_embeds is not None:
             # patch embeddings occupy cache rows ahead of the tokens and
             # are not token-addressable — no prefix matching for them
@@ -324,34 +493,126 @@ class Scheduler:
             tokens = ()
         # the block budget carries the speculative margin: the rejected
         # tail of a verify transiently occupies blocks past the final
-        # committed length, and lazy tail claims must never fail
+        # committed length, and lazy tail claims must never fail. A
+        # resume charges only the remaining budget (+1: the pending
+        # token still needs its row), so S_eff + budget is the same
+        # worst case as the fresh admission's.
+        budget = req.max_new_tokens + self._spec_margin
+        if resume:
+            budget -= len(req.tokens) - 1
         got = self.kv.try_admit(
-            req.rid, tokens, req.max_new_tokens + self._spec_margin, n_tokens=n_cache
+            req.rid,
+            tokens,
+            budget,
+            n_tokens=n_cache,
+            register=self.chunk_size is None,
         )
         if got is None:
             return False
         row, hit_ids = got
-        self._ordinals[req.rid] = self._n_admitted
-        self._n_admitted += 1
-        req.state, req.t_admit = PREFILL, now
+        self._note_admitted(req, now)
         req.slot = row
         hit = len(hit_ids) * self.kv.block_size
-        req.prefix_hit = hit
+        if resume:
+            self.stats.recomputed_tokens += n_cache - hit
+        else:
+            # prefix_hit stays the FIRST admission's hit: it feeds the
+            # prompt-token prefix_hit_rate, where resume recompute
+            # accounting would double-count the same prompt tokens
+            req.prefix_hit = hit
+        if self.chunk_size is not None:
+            if hit:
+                pk, pv = self.kv.gather_prefix(hit_ids)
+                cache = self.model.seed_cache_with_prefix(pk, pv, self.max_seq)
+            else:
+                cache = self.model.init_cache(1, self.max_seq)
+            self._chunking[row] = _ChunkState(
+                req=req, cache=cache, prompt=eff, pos=hit,
+                skip_blocks=len(hit_ids),
+            )
+            return True
+        prompt_dev = jnp.asarray(eff)
         if hit:
             pk, pv = self.kv.gather_prefix(hit_ids)
+            suffix = prompt_dev[hit:]
+            Ssuf = int(suffix.shape[0])
+            kw = {}
+            if self._bucket:
+                W = prefill_bucket(Ssuf)
+                if hit + W > self.max_seq:
+                    W = Ssuf
+                padded = np.zeros((1, W), np.int32)
+                padded[0, :Ssuf] = np.asarray(suffix)
+                suffix = jnp.asarray(padded)[0]
+                kw["suffix_len"] = jnp.asarray([Ssuf], jnp.int32)
             logits, cache = self._prefill_prefix(
-                self.params, jnp.asarray(prompt[hit:])[None, :], pk, pv
+                self.params, suffix[None, :], pk, pv, **kw
             )
         else:
             kw = {}
             if req.patch_embeds is not None:
                 kw["patch_embeds"] = jnp.asarray(req.patch_embeds)[None]
-            logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None, :], **kw)
+            S = int(prompt_dev.shape[0])
+            n_lead = 0 if req.patch_embeds is None else int(
+                jnp.asarray(req.patch_embeds).shape[0]
+            )
+            if self._bucket:
+                W = prefill_bucket(S)
+                if n_lead + W > self.max_seq:
+                    W = S
+                padded = np.zeros((1, W), np.int32)
+                padded[0, :S] = np.asarray(prompt_dev)
+                prompt_dev = jnp.asarray(padded)[0]
+                kw["prompt_len"] = jnp.asarray([S], jnp.int32)
+            logits, cache = self._prefill(self.params, prompt_dev[None, :], **kw)
         self.kv.write_prefill(row, cache, skip_blocks=len(hit_ids))
-        self._start_decode(req, row, logits[0], now)
+        if resume:
+            self._resume_decode(req, row, now)
+        else:
+            self._start_decode(req, row, logits[0], now)
         if self._drafter is not None and not req.finished:
             self._drafter.on_admit(row, req)
         return True
+
+    # ------------------------------------------------------------------
+    # priority preemption
+    def _maybe_preempt(self, head: Request) -> bool:
+        """Evict the lowest-priority live row to make room for ``head``
+        — only when ``head`` STRICTLY outranks it (equal priorities
+        never preempt each other: that would livelock two requests
+        trading the same row). Ties break toward the most recently
+        admitted victim (least sunk work lost). Returns True when a row
+        was freed (the caller retries admission)."""
+        victims = [
+            (req.priority, -(req.t_admit or 0.0), -req.rid, row)
+            for row, req in self._active.items()
+            if req.priority < head.priority
+        ]
+        if not victims:
+            return False
+        victims.sort()
+        self._preempt(victims[0][3])
+        return True
+
+    def _preempt(self, row: int) -> None:
+        """Evict a live decode row, keeping its stream resumable: the
+        sampling key and generated tokens persist on the request; the
+        paged layout re-registers its committed full blocks in the
+        prefix trie (they park instead of vanishing), so the resume
+        prefix-matches the whole committed history and recomputes only
+        the partial tail block."""
+        req = self._active.pop(row)
+        req.sample_key = np.asarray(self._keys[row])
+        committed = None
+        if self.kv_layout == "paged" and req.patch_embeds is None:
+            committed = tuple(int(t) for t in self._effective_prompt(req))
+        self.kv.preempt_row(row, committed)
+        req.state = PREEMPTED
+        req.slot = None
+        req.preemptions += 1
+        self.stats.n_preemptions += 1
+        self._queue.append(req)
+        self._queue.sort(key=self._queue_key)
 
     def _retire(self, req: Request, now: float) -> None:
         req.state, req.t_finish = FINISHED, now
@@ -425,7 +686,6 @@ class Scheduler:
         greedy = np.asarray(jnp.argmax(logits, axis=-1))  # [max_batch, K+1]
         now = time.perf_counter()
         self.stats.verify_ms.append((now - t_draft) * 1e3)
-        self.stats.step_ms.append((now - t_start) * 1e3)
         self.stats.spec_k = K
         self.stats.spec_steps += 1
 
@@ -463,37 +723,130 @@ class Scheduler:
             self.kv.truncate_rows(rej)
         self._drafter.rollback(rej)
 
+    def _admit_phase(self, now: float) -> bool:
+        """Admit arrived requests, highest priority first, preempting a
+        strictly-lower-priority live row when the pool is dry. The loop
+        terminates: each admission consumes capacity and each preemption
+        strictly raises the active set's priority multiset, both finite."""
+        admitted = False
+        while True:
+            arrived = [r for r in self._queue if r.arrival_time <= now]
+            if not arrived:
+                return admitted
+            if self.kv_layout == "paged":
+                head = arrived[0]
+                if self._try_admit_paged(head, now):
+                    self._queue.remove(head)
+                    admitted = True
+                    continue
+            else:
+                wave = arrived[: self.kv.n_free]
+                if wave:
+                    for r in wave:
+                        self._queue.remove(r)
+                    if self.chunk_size is not None:
+                        for r in wave:
+                            self._start_chunk_slot(r, now)
+                    else:
+                        self._admit(wave, now)
+                    admitted = True
+                    continue
+                head = arrived[0]
+            if not self._maybe_preempt(head):
+                return admitted
+
+    def _prefill_phase(self, now: float) -> bool:
+        """Spend at most ``chunk_size`` prompt tokens of chunked prefill
+        work, highest-priority request first. Each slice is one
+        ``prefill_chunk`` call padded to its pow2 bucket (≤ chunk_size)
+        — chunk position rides in the cache's ``len``, so walking a
+        prompt reuses one trace per bucket. A prompt that completes
+        installs into the pool and its first token samples this step."""
+        if not self._chunking:
+            return False
+        budget = self.chunk_size
+        while budget > 0 and self._chunking:
+            row, st = min(
+                self._chunking.items(), key=lambda it: self._queue_key(it[1].req)
+            )
+            n = min(budget, len(st.prompt) - st.pos)
+            W = prefill_bucket(n, self.chunk_size)
+            while st.pos + W > self.max_seq:  # pad row would overrun the cache
+                W //= 2
+            n = min(n, W)
+            toks = np.zeros((1, W), np.int32)
+            toks[0, :n] = st.prompt[st.pos : st.pos + n]
+            logits, st.cache = self._prefill_chunk(
+                self.params, st.cache, jnp.asarray(toks),
+                jnp.asarray([n], jnp.int32),
+            )
+            st.pos += n
+            budget -= n
+            if st.pos == len(st.prompt):
+                del self._chunking[row]
+                self._install_chunked(st, row, logits[0, n - 1], now)
+        return True
+
+    def _install_chunked(self, st: _ChunkState, row: int, logits_row, now) -> None:
+        """A fully-chunked prompt lands in the pool: paged rows write
+        their fresh blocks (prefix-hit blocks skipped — already shared
+        and immutable) and register the prompt in the trie now that the
+        blocks hold real KV; slotted rows install the whole dense cache."""
+        req = st.req
+        if self.kv_layout == "paged":
+            self.kv.write_prefill(row, st.cache, skip_blocks=st.skip_blocks)
+            self.kv.register_prompt(row, tuple(int(t) for t in st.prompt))
+        else:
+            self.kv.write(row, st.cache)
+        if req.tokens:
+            self._resume_decode(req, row, now)
+        else:
+            self._start_decode(req, row, logits_row, now)
+        if self._drafter is not None and not req.finished:
+            self._drafter.on_admit(row, req)
+
+    def prime(self) -> None:
+        """Pre-compile the chunked-prefill trace family: one trace per
+        pow2 bucket W ≤ chunk_size. The family is closed — every slice
+        ``_prefill_phase`` can emit (full chunks, resume tails, the
+        overrun-halved fallback) pads to one of these widths — so a
+        primed scheduler never retraces chunk prefill mid-run. No-op
+        when chunking is off. The jitted fn is shared through the
+        engine's step-fn cache, so priming one scheduler warms every
+        later scheduler on the same engine and backend."""
+        if self._prefill_chunk is None:
+            return
+        cache = self.model.init_cache(1, self.max_seq)
+        W = 1
+        while W <= self.chunk_size:
+            logits, _ = self._prefill_chunk(
+                self.params, cache, jnp.zeros((1, W), jnp.int32),
+                jnp.asarray([W], jnp.int32),
+            )
+            jax.block_until_ready(logits)
+            W *= 2
+
     def step(self, now: Optional[float] = None) -> bool:
-        """Admit arrived requests, then run one batched decode over the
-        live set. Returns False when there was nothing to do."""
+        """Admit arrived requests, spend the chunked-prefill token
+        budget, then run one batched decode over the live set. Returns
+        False when there was nothing to do. ``step_ms`` covers the whole
+        step, so prefill stalls show up in the tail they cause."""
         if now is None:
             now = self._clock()
-        admitted = False
-        if self.kv_layout == "paged":
-            while self._queue and self._queue[0].arrival_time <= now:
-                if not self._try_admit_paged(self._queue[0], now):
-                    break
-                self._queue.pop(0)
-                admitted = True
-        else:
-            wave = []
-            while (
-                self._queue
-                and self._queue[0].arrival_time <= now
-                and len(wave) < self.kv.n_free
-            ):
-                wave.append(self._queue.pop(0))
-            if wave:
-                self._admit(wave, now)
-                admitted = True
+        t0 = time.perf_counter()
+        admitted = self._admit_phase(now)
+        chunked = self._prefill_phase(now)
         if not self._active:
-            return admitted
+            if admitted or chunked:
+                self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
+                return True
+            return False
         if self.spec is not None:
             self._spec_step()
+            self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
             return True
 
         mask = self.kv.live_mask()
-        t0 = time.perf_counter()
         logits = self._decode_pool(mask)
         self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
         if self.kv_layout == "paged":
@@ -523,9 +876,12 @@ class Scheduler:
         requests = list(requests or [])
         for r in requests:
             self.submit(r)
-        while self._queue or self._active:
-            if not self._active and self._queue:
-                wait = self._queue[0].arrival_time - self._clock()
+        while self._queue or self._active or self._chunking:
+            if not self._active and not self._chunking and self._queue:
+                # earliest arrival, not queue head: the queue is priority-
+                # ordered, so the head may arrive later than a lower-
+                # priority request
+                wait = min(r.arrival_time for r in self._queue) - self._clock()
                 if wait > 0:
                     time.sleep(wait)
             self.step()

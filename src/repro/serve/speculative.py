@@ -186,12 +186,29 @@ class ModelDraftSource:
         self._max_seq = int(max_seq) + self.k + 1  # speculative overhang
         model = self.model
         seq = self._max_seq
-        self._prefill = jax.jit(lambda p, t: model.prefill(p, t, seq))
+        self._prefill = jax.jit(
+            lambda p, t, n: model.prefill(p, t, seq, prompt_len=n)
+        )
         self.cache = model.init_cache(int(max_batch), seq)
 
     def on_admit(self, row: int, req) -> None:
-        prompt = jnp.asarray(np.asarray(req.prompt))[None, :]
-        _, cache1 = self._prefill(self.params, prompt)
+        # catch up on the request's committed history: the prompt, plus
+        # — when resuming after a preemption — every generated token but
+        # the pending last one (it is fed to propose, never pre-cached).
+        # Pow2-bucketed (pad + per-row length): SPEC_FAMILIES are all
+        # pad-safe, and one trace per bucket beats one per prompt length.
+        from repro.models.model import prefill_bucket
+
+        hist = np.asarray(req.prompt, np.int32)
+        if len(req.tokens) > 1:
+            hist = np.concatenate([hist, np.asarray(req.tokens[:-1], np.int32)])
+        S = len(hist)
+        W = prefill_bucket(S, self._max_seq)
+        padded = np.zeros((1, W), np.int32)
+        padded[0, :S] = hist
+        _, cache1 = self._prefill(
+            self.params, jnp.asarray(padded), jnp.asarray([S], jnp.int32)
+        )
         self.cache = self.model.write_cache_slot(self.cache, cache1, row)
 
     def propose(self, active: dict, tok: np.ndarray) -> np.ndarray:
