@@ -57,7 +57,8 @@ def write_summary(rows, gm_pos, gm_all, ubench_us, serving=None, path="BENCH_air
     ``speculative`` K-sweep vs the K=0 greedy baseline, and the
     ``attention_backend`` sweep — p50 TPOT and per-step attention time
     per (KV layout × backend) plus the KernelAdvisorTool's measured
-    backend decision)."""
+    backend decision — and the ``sharded`` mesh sweep's per-step
+    latency at mesh sizes {1,2,4} under bitwise token identity)."""
     summary = {
         "benchmarks": [
             {
@@ -114,6 +115,14 @@ def main() -> None:
     # the chunked-p99-step and nonzero-goodput asserts are the tracked
     # scheduling contract (DESIGN.md §3.3)
     serving["slo"] = serving_load.run_slo(overload=True)
+    print()
+    # mesh-sharded paged decode at mesh sizes {1,2,4} on one workload:
+    # bitwise token identity vs the single-device paged path (plain,
+    # speculative, chunked) plus per-step latency per mesh size — the
+    # tracked tensor-parallel serving contract (DESIGN.md §5). Runs in
+    # a forced multi-device CPU subprocess when this process has one
+    # real device (the normal CI case).
+    serving["sharded"] = serving_load.run_sharded()
     write_summary(rows, gm_pos, gm_all, ubench_us, serving=serving)
 
 

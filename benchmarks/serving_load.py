@@ -50,6 +50,20 @@ p99-step contract asserted here. The CI smoke contract: nonzero
 preemptions under overload, nonzero goodput, and a strictly smaller
 chunked p99 step.
 
+The sharded mode (``run_sharded`` / ``--mesh N``) serves one identical
+open-loop workload at every power-of-two mesh size up to N through the
+head-partitioned tensor-parallel paged path (DESIGN.md §5): the paged
+pool's KV leaves are sharded head-wise over a ``("model",)`` mesh and
+decode/verify run per-shard under ``shard_map``. Bitwise token identity
+against the single-device paged engine is asserted for plain,
+speculative (K=2), and chunked-prefill serving — head partitioning
+moves parallel work, never a reduction order — and per-decode-step
+latency is recorded per mesh size. When the process has fewer devices
+than the largest mesh (the normal single-device CI run), the sweep
+re-execs itself in a subprocess with a forced multi-device CPU host
+platform, so ``benchmarks.run`` still lands ``serving.sharded`` in the
+summary.
+
 Feeds the ``serving`` section of ``BENCH_aira.json`` (benchmarks/run.py)
 so serving latency is tracked across PRs. Request generation lives in
 ``repro.serve.load`` (shared with examples/serve_decode.py).
@@ -450,6 +464,168 @@ def run_speculative(
     return summary
 
 
+def _run_sharded_subprocess(kwargs: dict, need: int, print_fn) -> dict:
+    """Re-exec ``run_sharded`` with a forced ``need``-device CPU host
+    platform. XLA_FLAGS must be set before jax initializes, and this
+    process has already initialized it with its real (single) device —
+    so the sweep itself runs in a child and ships its summary back as a
+    sentinel-prefixed JSON line."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={need}"
+    ).strip()
+    code = (
+        "import json\n"
+        "from benchmarks import serving_load\n"
+        f"s = serving_load.run_sharded(**{kwargs!r})\n"
+        "print('SHARDED_JSON::' + json.dumps(s))\n"
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=1200,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharded sweep subprocess failed:\n{r.stderr}\n{r.stdout}"
+        )
+    summary = None
+    for line in r.stdout.splitlines():
+        if line.startswith("SHARDED_JSON::"):
+            summary = json.loads(line[len("SHARDED_JSON::"):])
+        else:
+            print_fn(line)
+    assert summary is not None, r.stdout
+    return summary
+
+
+def run_sharded(
+    *,
+    arch: str = "smollm-135m",
+    n_requests: int = 8,
+    rate_rps: float = 50.0,
+    max_batch: int = 4,
+    tokens: int = 8,
+    mesh_sizes=(1, 2, 4),
+    backend: str = "interpret",
+    seed: int = 0,
+    print_fn=print,
+) -> dict:
+    """One workload, every mesh size: the tensor-parallel paged serving
+    path (DESIGN.md §5) vs the single-device paged engine. Per mesh
+    size the same open-loop arrivals are served plain, speculative
+    (K=2, n-gram drafter), and with chunked prefill; all three streams
+    are asserted BITWISE identical to the mesh-less run (head
+    partitioning + all-gather preserves every reduction order), and
+    per-decode-step latency is recorded from the plain serve. The
+    default ``interpret`` backend runs the real block-paged kernel code
+    per-shard on CPU (the CI smoke contract). Latency across forced CPU
+    host-platform "devices" shares the same cores, so the numbers track
+    dispatch/collective overhead, not speedup — the contract asserted
+    here is identity, the latency is reported."""
+    need = max(mesh_sizes)
+    if need > 1 and len(jax.devices()) < need:
+        return _run_sharded_subprocess(
+            dict(arch=arch, n_requests=n_requests, rate_rps=rate_rps,
+                 max_batch=max_batch, tokens=tokens,
+                 mesh_sizes=tuple(mesh_sizes), backend=backend, seed=seed),
+            need, print_fn,
+        )
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import ServingEngine, SpecConfig
+    from repro.serve.load import make_requests
+
+    # mid-size with 8 query / 4 kv heads so every mesh size in the sweep
+    # divides both (g=2 exercises GQA grouping under the head split)
+    cfg = dataclasses.replace(
+        get_config(arch).reduced(),
+        num_layers=4, d_model=128, d_ff=384, n_heads=8, n_kv_heads=4, head_dim=16,
+    )
+    model = Model(cfg)
+    params, _ = model.init(jax.random.key(seed))
+
+    def workload():
+        return make_requests(
+            n_requests, rate_rps, vocab=cfg.vocab_size, max_new_tokens=tokens,
+            rng=np.random.default_rng(seed),
+        )
+
+    modes = (
+        ("plain", {}),
+        ("speculative", {"spec": SpecConfig(k=2, drafter="ngram")}),
+        ("chunked", {"chunk_size": 4}),
+    )
+    results, outputs = {}, {}
+    for tp in mesh_sizes:
+        if tp > 1:
+            try:
+                mesh = jax.make_mesh(
+                    (tp,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
+                )
+            except AttributeError:  # jax 0.4.x: no AxisType
+                mesh = jax.make_mesh((tp,), ("model",))
+        else:
+            mesh = None
+        engine = ServingEngine(
+            model, params, max_seq=64, kv_layout="paged", mesh=mesh,
+            attention_backend=backend,
+        )
+        if tp > 1:
+            assert engine.mesh is mesh, "sharded sweep fell back to replicated"
+        outputs[tp] = {}
+        for mode, kw in modes:
+            engine.serve(workload(), max_batch=max_batch, seed=seed, **kw)  # warm
+            reqs = workload()
+            out = engine.serve(reqs, max_batch=max_batch, seed=seed, **kw)
+            outputs[tp][mode] = [np.asarray(out[r.rid]) for r in reqs]
+            if mode == "plain":
+                s = engine.stats.serving_summary()
+                results[f"tp{tp}"] = {
+                    "p50_step_ms": s["p50_step_ms"],
+                    "p99_step_ms": s["p99_step_ms"],
+                    "p50_tpot_ms": s["p50_tpot_ms"],
+                }
+
+    base_tp = mesh_sizes[0]
+    for tp in mesh_sizes[1:]:
+        for mode, _ in modes:
+            for a, b in zip(outputs[base_tp][mode], outputs[tp][mode]):
+                np.testing.assert_array_equal(
+                    a, b,
+                    err_msg=f"mesh={tp} {mode} diverged from the "
+                            f"single-device paged path",
+                )
+
+    summary = {
+        "arch": arch,
+        "mesh_sizes": list(mesh_sizes),
+        "backend": backend,
+        "identity": "bitwise (plain, speculative K=2, chunked)",
+        **results,
+    }
+    print_fn("# serving — mesh-sharded paged decode (token-identity asserted)")
+    print_fn(
+        f"arch={arch} requests={n_requests} tokens={tokens} pool={max_batch} "
+        f"heads={cfg.n_heads}/{cfg.n_kv_heads} backend={backend} "
+        f"mesh_sizes={list(mesh_sizes)}"
+    )
+    for tp in mesh_sizes:
+        r = results[f"tp{tp}"]
+        print_fn(
+            f"mesh={tp}: step p50={r['p50_step_ms']:.2f}ms "
+            f"p99={r['p99_step_ms']:.2f}ms tpot p50={r['p50_tpot_ms']:.2f}ms"
+        )
+    print_fn("token identity: plain + speculative(K=2) + chunked — bitwise")
+    return summary
+
+
 def _goodput(reqs, ttft_slo_ms: float, tpot_slo_ms) -> float:
     """Fraction of requests that finished AND met the latency SLO:
     TTFT (queueing included — the user-visible number) within
@@ -630,6 +806,12 @@ if __name__ == "__main__":
     ap.add_argument("--overload", action="store_true",
                     help="with --chunked: under-provision the paged pool so "
                          "preemption fires (CI overload smoke)")
+    ap.add_argument("--mesh", metavar="N", type=int, default=None,
+                    help="sharded mode: serve one workload at every "
+                         "power-of-two mesh size up to N through the "
+                         "head-partitioned paged path, asserting bitwise "
+                         "token identity vs single-device (CI multi-device "
+                         "smoke: --mesh 4)")
     args = ap.parse_args()
     if args.shared_prefix:
         run_shared_prefix()
@@ -639,5 +821,12 @@ if __name__ == "__main__":
         run_backend_sweep(backends=("reference", args.backend))
     elif args.chunked:
         run_slo(overload=args.overload)
+    elif args.mesh:
+        run_sharded(
+            mesh_sizes=tuple(
+                2 ** i for i in range(args.mesh.bit_length())
+                if 2 ** i <= args.mesh
+            )
+        )
     else:
         run()

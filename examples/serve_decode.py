@@ -33,13 +33,35 @@ prompt tokens of prefill are admitted per decode step, so a long
 prompt's prefill interleaves with running decodes instead of stalling
 them (DESIGN.md §3.3; token streams are unchanged by construction).
 
+``--mesh N`` serves through the tensor-parallel sharded path
+(DESIGN.md §5): the paged pool's KV leaves are head-partitioned over an
+N-way ``("model",)`` mesh and decode/verify run per-shard under
+``shard_map`` — token streams are bitwise those of the single-device
+paged path. Requires ``--paged`` and ``--open-loop`` (the mesh is wired
+through ``engine.serve(mesh=)``); on a single-device CPU host the
+script forces an N-device host platform for you. Architectures whose
+kv-head count the mesh does not divide fall back to replicated serving
+with a logged warning.
+
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
       [--int8-kv] [--paged] [--spec 4] [--tokens 32] [--batch 4]
       [--aira] [--open-loop 8] [--rate 20] [--backend interpret]
-      [--chunk 16]
+      [--chunk 16] [--mesh 2]
 """
 import argparse
 import dataclasses
+import os
+import sys
+
+# --mesh on a single-device CPU host needs the forced device count set
+# BEFORE jax initializes, so peek at argv ahead of the jax import
+if "--mesh" in sys.argv[:-1]:
+    _n = int(sys.argv[sys.argv.index("--mesh") + 1])
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if _n > 1 and "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + f" --xla_force_host_platform_device_count={_n}"
+        ).strip()
 
 import jax
 import numpy as np
@@ -77,6 +99,12 @@ def main():
                          "prefill per decode step (pow2; 0 = monolithic). "
                          "Long prompts stop stalling co-resident decodes "
                          "(DESIGN.md §3.3)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="tensor-parallel serving: head-partition the paged "
+                         "KV pool over an N-way ('model',) mesh and run "
+                         "decode/verify per-shard (DESIGN.md §5; requires "
+                         "--paged and --open-loop; token streams stay "
+                         "bitwise single-device)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -84,6 +112,26 @@ def main():
         cfg = dataclasses.replace(cfg, kv_quant=True)
     if args.spec and args.aira:
         raise SystemExit("--spec and --aira both rewrite the decode step; pick one")
+    mesh = None
+    if args.mesh > 1:
+        if not args.paged:
+            raise SystemExit("--mesh shards the paged pool; add --paged")
+        if not args.open_loop:
+            raise SystemExit("--mesh rides the serve() path; add --open-loop N")
+        if len(jax.devices()) < args.mesh:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} devices, have "
+                f"{len(jax.devices())} (on CPU the script sets "
+                f"xla_force_host_platform_device_count for you — is "
+                f"XLA_FLAGS already pinning a smaller count?)"
+            )
+        try:
+            mesh = jax.make_mesh(
+                (args.mesh,), ("model",),
+                axis_types=(jax.sharding.AxisType.Auto,),
+            )
+        except AttributeError:  # jax 0.4.x: no AxisType
+            mesh = jax.make_mesh((args.mesh,), ("model",))
     model = Model(cfg)
     params, _ = model.init(jax.random.key(0))
     from repro.serve import SpecConfig
@@ -111,6 +159,7 @@ def main():
     print(
         f"arch={args.arch} int8_kv={args.int8_kv} paged={args.paged} "
         f"spec_k={args.spec} aira={args.aira} backend={engine.attention_backend}"
+        + (f" mesh={args.mesh}" if mesh is not None else "")
     )
     if args.open_loop > 0:
         from repro.serve.load import make_requests
@@ -122,7 +171,9 @@ def main():
             max_new_tokens=args.tokens,
             rng=np.random.default_rng(0),
         )
-        outputs = engine.serve(reqs, max_batch=args.batch, chunk_size=args.chunk)
+        outputs = engine.serve(
+            reqs, max_batch=args.batch, chunk_size=args.chunk, mesh=mesh
+        )
         for r in reqs:
             print(
                 f"  req {r.rid}: arrive={r.arrival_time*1e3:7.1f}ms "

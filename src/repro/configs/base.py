@@ -247,5 +247,5 @@ def cells(arch: str) -> list[Tuple[ModelConfig, ShapeConfig]]:
 
 def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     if shape.name == "long_500k" and not cfg.sub_quadratic:
-        return False, "skipped: full-attention arch at 500k decode (see DESIGN.md §5.2)"
+        return False, "skipped: full-attention arch at 500k decode (see DESIGN.md §6.2)"
     return True, ""

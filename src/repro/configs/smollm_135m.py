@@ -2,7 +2,7 @@
 
 30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152
 [hf:HuggingFaceTB/SmolLM-135M; hf]. 9 heads ∤ 16 → attention head-TP
-inapplicable; sharding falls back to sequence parallelism (DESIGN.md §5.1).
+inapplicable; sharding falls back to sequence parallelism (DESIGN.md §6.1).
 """
 from repro.configs.base import ModelConfig, register
 

@@ -93,7 +93,7 @@ def profile_step(
     keep_compiled: bool = False,
     **abstract_kwargs,
 ) -> ProfiledStep:
-    """Lower + compile; derive per-device roofline terms (DESIGN.md §6)."""
+    """Lower + compile; derive per-device roofline terms (DESIGN.md §7)."""
     hw = hw or HwModel()
     kw = {}
     if in_shardings is not None:

@@ -100,25 +100,43 @@ def set_attention_backend(name: Optional[str]) -> None:
     _ATTN_BACKEND = None if name in (None, "auto") else name
 
 
-def resolve_attention_backend(backend: Optional[str] = None) -> str:
+def resolve_attention_backend(
+    backend: Optional[str] = None, mesh=None
+) -> str:
     """Per-call override → config override → ``REPRO_ATTENTION_BACKEND``
     → platform default (``"kernel"`` on TPU, ``"reference"`` elsewhere).
     An explicit ``"auto"`` defers to the same default chain as ``None``
     (so the env override is never silently bypassed). Resolution happens
     once and is logged once; bad names fail loudly with the valid
-    choices."""
+    choices.
+
+    ``mesh`` makes the resolution mesh-aware for sharded serving
+    (DESIGN.md §5): under ``shard_map`` the paged kernel runs per-shard
+    on local heads, so "kernel" composes with a mesh instead of falling
+    back to reference — but un-lowered Pallas cannot run on host
+    devices, so on a non-TPU mesh "kernel" resolves to "interpret"
+    (the same kernel code, interpreted). TPU meshes keep "kernel"."""
     if backend is not None and backend != "auto":
-        return _validate_backend(backend, "backend")
-    global _ATTN_BACKEND
-    if _ATTN_BACKEND is None:
-        raw = os.environ.get("REPRO_ATTENTION_BACKEND", "auto")
-        _ATTN_BACKEND = _validate_backend(raw, "REPRO_ATTENTION_BACKEND")
+        resolved = _validate_backend(backend, "backend")
+    else:
+        global _ATTN_BACKEND
+        if _ATTN_BACKEND is None:
+            raw = os.environ.get("REPRO_ATTENTION_BACKEND", "auto")
+            _ATTN_BACKEND = _validate_backend(raw, "REPRO_ATTENTION_BACKEND")
+            log.info(
+                "attention backend resolved once: %s (REPRO_ATTENTION_BACKEND=%s, "
+                "platform=%s)",
+                _ATTN_BACKEND, raw, jax.default_backend(),
+            )
+        resolved = _ATTN_BACKEND
+    if mesh is not None and resolved == "kernel" and not _on_tpu():
         log.info(
-            "attention backend resolved once: %s (REPRO_ATTENTION_BACKEND=%s, "
-            "platform=%s)",
-            _ATTN_BACKEND, raw, jax.default_backend(),
+            "attention backend 'kernel' on a %s mesh → 'interpret' "
+            "(Pallas runs per-shard; host devices interpret it)",
+            jax.default_backend(),
         )
-    return _ATTN_BACKEND
+        return "interpret"
+    return resolved
 
 
 def vmem_working_set(block_bytes: dict[str, int], buffering: int = 2) -> int:

@@ -463,6 +463,7 @@ def attention_block(
     cache_len=None,
     prefix_kv=None,
     backend=None,
+    tp_axis=None,
 ):
     """Pre-norm'd GQA attention. Returns (out, new_cache_kv).
 
@@ -612,8 +613,20 @@ def attention_block(
         )
         new_kv = (k_cache, v_cache)
 
+    if tp_axis is not None:
+        # Head-partitioned serving (shard_map body with a local-view cfg):
+        # each rank computed a contiguous head block [r·H_loc, (r+1)·H_loc).
+        # Softmax is per-head so the shards are already final — gather them
+        # back into global head order and run the FULL (replicated) output
+        # projection, which keeps the wo contraction order — and thus the
+        # residual stream — bitwise identical to the unsharded step
+        # (DESIGN.md §5). kv-sequence splits would instead combine partials
+        # via collectives.distributed_softmax before this point.
+        out = jax.lax.all_gather(out, tp_axis, axis=2, tiled=True)
+    # head count derived from the attention output, not cfg: under tp_axis
+    # the gather restores the global head axis while cfg carries local heads
     if params["wo"].ndim == 2:  # flat-TP layout
-        o2 = out.astype(x.dtype).reshape(B, out.shape[1], H * hd)
+        o2 = out.astype(x.dtype).reshape(B, out.shape[1], out.shape[2] * hd)
         o2 = constrain(rules, o2, ("batch", "seq_sp", "qdim"))
         out = jnp.einsum("bse,ed->bsd", o2, params["wo"])
     else:

@@ -5,6 +5,7 @@ the HLO stays compact at 48+ layers; remat policy wraps the scan body.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Optional
 
@@ -92,10 +93,15 @@ def _dtype(cfg):
 class Model:
     """Functional model wrapper: all methods are pure and jit-friendly."""
 
-    def __init__(self, cfg: ModelConfig, mesh=None):
+    def __init__(self, cfg: ModelConfig, mesh=None, tp_axis=None):
         self.cfg = cfg
         self.mesh = mesh
         self.rules = ShardingRules(mesh, cfg) if mesh is not None else None
+        # serving tensor parallelism: set on the LOCAL-view model built by
+        # ``sharded_paged_step`` (cfg carries per-rank head counts, rules is
+        # None so the kernel backend engages per-shard); attention gathers
+        # head shards over this shard_map axis before the output projection
+        self.tp_axis = tp_axis
 
     # ------------------------------------------------------------------
     # parameters
@@ -197,6 +203,7 @@ class Model:
             cache_len=cache_len,
             prefix_kv=prefix_kv,
             backend=backend,
+            tp_axis=self.tp_axis,
         )
         x = x + h
         hin = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
@@ -344,6 +351,101 @@ class Model:
         can never silently retarget an existing trace (DESIGN.md §4)."""
         backend = kernel_ops.resolve_attention_backend(backend)
         return jax.jit(functools.partial(getattr(self, name), backend=backend))
+
+    def paged_pool_specs(self, axis="model"):
+        """PartitionSpecs for the block-pool leaves under serving TP
+        (DESIGN.md §5): KV (and scale) leaves shard on the kv-head axis;
+        the layer/block/offset axes are physical storage walked identically
+        by every rank. Block tables and lengths are data, not pool leaves —
+        they stay replicated."""
+        kv = jax.sharding.PartitionSpec(None, None, None, axis, None)
+        sc = jax.sharding.PartitionSpec(None, None, None, axis)
+        specs = {"k": kv, "v": kv}
+        if self.cfg.kv_quant:
+            specs.update(k_scale=sc, v_scale=sc)
+        return specs
+
+    def sharded_paged_step(self, name: str, mesh, backend=None, axis="model"):
+        """``jit_step`` counterpart for tensor-parallel paged serving:
+        ``jit(shard_map(...))`` of ``decode_step_paged`` /
+        ``verify_step_paged`` with the pool's KV leaves head-partitioned
+        over mesh axis ``axis`` and everything else (params, block tables,
+        lengths, tokens, logits) replicated.
+
+        Each rank slices its contiguous head block out of the replicated
+        q/k/v projections (rank r owns q heads [r·H/P, (r+1)·H/P) and the
+        matching kv groups — GQA groups never straddle ranks) and runs the
+        UNSHARDED step body through a local-view model whose cfg carries
+        the per-rank head counts. With ``rules=None`` on the local model
+        the kernel backend engages per-shard exactly as on one device; the
+        head shards are gathered back before the (replicated) output
+        projection inside ``attention_block``, so every rank computes a
+        bitwise-identical residual stream and logits — see DESIGN.md §5
+        for why head partitioning needs no cross-rank softmax. Tables and
+        lengths remain data, so the single-trace / no-retrace invariants
+        of ``jit_step`` carry over unchanged."""
+        backend = kernel_ops.resolve_attention_backend(backend, mesh=mesh)
+        cfg = self.cfg
+        tp = mesh.shape[axis]
+        if tp == 1:
+            return self.jit_step(name, backend=backend)
+        if cfg.n_kv_heads % tp or cfg.n_heads % tp:
+            raise ValueError(
+                f"n_kv_heads={cfg.n_kv_heads}/n_heads={cfg.n_heads} do not "
+                f"divide mesh axis {axis!r} (size {tp}); ShardingRules "
+                "dropped the head mapping — serve replicated instead"
+            )
+        from repro.compat import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        h_loc, kv_loc, hd = cfg.n_heads // tp, cfg.n_kv_heads // tp, cfg.head_dim
+        local = Model(
+            dataclasses.replace(cfg, n_heads=h_loc, n_kv_heads=kv_loc),
+            tp_axis=axis,
+        )
+        step = getattr(local, name)
+
+        def slice_heads(attn_p):
+            r = jax.lax.axis_index(axis)
+
+            def sl(w, n_loc):
+                if w.ndim == 3:  # flat-TP [L, d, h·hd]: heads are
+                    # flattened h-major, so a head block is a contiguous
+                    # column range
+                    return jax.lax.dynamic_slice_in_dim(
+                        w, r * n_loc * hd, n_loc * hd, axis=2
+                    )
+                return jax.lax.dynamic_slice_in_dim(w, r * n_loc, n_loc, axis=2)
+
+            return dict(
+                attn_p,
+                wq=sl(attn_p["wq"], h_loc),
+                wk=sl(attn_p["wk"], kv_loc),
+                wv=sl(attn_p["wv"], kv_loc),
+            )  # wo stays full: the output projection runs on gathered heads
+
+        def body(params, pool, block_tables, cache_len, tokens):
+            layers = dict(
+                params["layers"], attn=slice_heads(params["layers"]["attn"])
+            )
+            return step(
+                dict(params, layers=layers),
+                pool,
+                block_tables,
+                cache_len,
+                tokens,
+                backend=backend,
+            )
+
+        pool_specs = self.paged_pool_specs(axis)
+        fn = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), pool_specs, P(), P(), P()),
+            out_specs=(P(), pool_specs),
+            check_vma=False,
+        )
+        return jax.jit(fn)
 
     def init_cache(self, batch, max_seq, dtype=None):
         cfg = self.cfg

@@ -1,6 +1,6 @@
 """Top-k routed expert MLP with expert parallelism over the 'model' axis.
 
-Two execution paths (selected per workload shape, DESIGN.md §5):
+Two execution paths (selected per workload shape, DESIGN.md §6):
 
 dispatch — train/prefill: tokens are sequence-sharded over the full mesh
     (SP), routed locally, exchanged with ``lax.all_to_all`` over 'model'

@@ -80,6 +80,39 @@ def matmul_reducescatter(h_loc, w_loc, axis_name: str):
     return acc.astype(h_loc.dtype)
 
 
+def distributed_softmax(m_loc, l_loc, acc_loc, axis_name: str):
+    """Combine per-rank flash-decode partials over ``axis_name``.
+
+    Each rank holds a partial softmax over its local slice of the KV
+    sequence for the SAME query/head set, in the usual flash-attention
+    running form:
+
+        m_loc   [...]      local running max of the logits
+        l_loc   [...]      local sum of exp(logit - m_loc)
+        acc_loc [..., d]   local sum of exp(logit - m_loc) · v
+
+    The exact global softmax follows from rescaling each rank's partial
+    to the global max m = max_r m_r:
+
+        l   = Σ_r l_r · exp(m_r − m)
+        acc = Σ_r acc_r · exp(m_r − m)
+        out = acc / l
+
+    because exp(logit − m) = exp(logit − m_r) · exp(m_r − m) for every
+    logit that rank r saw. Returns the combined ``out [..., d]``.
+
+    This is the kv-sequence-split combine (``ShardingRules`` 'kv_seq',
+    DESIGN.md §5): it is only needed when the KV *sequence* is
+    partitioned. The head-partitioned serving path never calls it —
+    softmax is per-head, so a head shard completes its softmax locally.
+    """
+    m = lax.pmax(m_loc, axis_name)
+    scale = jnp.exp(m_loc - m)
+    l = lax.psum(l_loc * scale, axis_name)
+    acc = lax.psum(acc_loc * scale[..., None], axis_name)
+    return acc / jnp.maximum(l, jnp.finfo(acc.dtype).tiny)[..., None]
+
+
 def sp_swiglu(x, w1, w3, w2, rules):
     """Sequence-parallel SwiGLU with ring-overlapped TP collectives.
 

@@ -5,7 +5,7 @@ Every parameter / activation carries a tuple of *logical* axis names.
 whose dimension does not divide evenly by the mesh-axis size. Each dropped
 mapping is recorded — the adviser (core/adviser.py) treats fallbacks exactly
 like the paper treats "kernel too fine-grained for this scheduling strategy"
-and picks the next strategy in the band (DESIGN.md §5.1).
+and picks the next strategy in the band (DESIGN.md §6.1).
 """
 from __future__ import annotations
 
@@ -42,6 +42,7 @@ class ShardingRules:
         model = mesh.shape.get("model", 1)
         heads_ok = cfg.n_heads and cfg.n_heads % model == 0
         kv_ok = cfg.n_kv_heads and cfg.n_kv_heads % model == 0
+        self.kv_heads_ok = bool(kv_ok)
 
         self.table: dict[str, MeshAxes] = {
             # parameter axes
@@ -51,6 +52,9 @@ class ShardingRules:
             "mlp": "model",
             "heads": "model" if heads_ok else None,
             "kv_heads": "model" if kv_ok else None,
+            # q heads within a kv group always travel with their group's kv
+            # head (serving TP shards contiguous head blocks), never alone
+            "q_heads_per_group": None,
             "head_dim": None,
             "qdim": "model",  # flattened h·hd projection dim (attn_flat_tp)
             "vocab": "model",
@@ -64,7 +68,7 @@ class ShardingRules:
             "batch": batch_axes,
             "seq": None,
             # sequence-parallel fallback: queries over 'model' when heads
-            # cannot shard (DESIGN.md §5.1)
+            # cannot shard (DESIGN.md §6.1)
             "seq_sp": "model" if not heads_ok else None,
             # decode KV-cache sequence axis: shard over 'model' when the
             # kv-head axis cannot (flash-decode partial-softmax combine)
@@ -95,8 +99,24 @@ class ShardingRules:
                 continue
             if isinstance(mesh_axes, str):
                 mesh_axes = (mesh_axes,)
-            # drop already-used axes, then check divisibility progressively
-            cand = tuple(a for a in mesh_axes if a not in used)
+            # Mesh axes the mesh does not define are not candidates at all
+            # (e.g. 'data' on a serving-only ('model',) mesh) — skipping them
+            # is not a fallback event. Axes already consumed by an EARLIER
+            # dimension of this array are dropped and recorded under the
+            # logical name of the dimension being dropped (the later one),
+            # then divisibility is checked progressively.
+            keep = []
+            for a in mesh_axes:
+                if a not in self.mesh.shape:
+                    continue
+                if a in used:
+                    self.fallbacks.append(
+                        f"{name}:{dim} mesh axis {a} already used by an "
+                        f"earlier dim; dropped {a}"
+                    )
+                    continue
+                keep.append(a)
+            cand = tuple(keep)
             while cand and dim % _axis_size(self.mesh, cand) != 0:
                 dropped = cand[-1]
                 cand = cand[:-1]

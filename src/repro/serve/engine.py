@@ -45,6 +45,7 @@ it *servable*: requests are admitted, decoded, and retired individually
 """
 from __future__ import annotations
 
+import logging
 from typing import Optional
 
 import jax
@@ -53,6 +54,8 @@ import jax.numpy as jnp
 from repro.kernels import ops as kernel_ops
 from repro.serve.request import Request, ServeStats  # noqa: F401 (re-export)
 from repro.serve.scheduler import Scheduler
+
+log = logging.getLogger("repro.serve")
 
 
 class ServingEngine:
@@ -72,6 +75,7 @@ class ServingEngine:
         spec=None,
         attention_backend: Optional[str] = None,
         chunk_size: Optional[int] = None,
+        mesh=None,
     ):
         self.model = model
         self.params = params
@@ -84,13 +88,32 @@ class ServingEngine:
         self.prefix_cache = prefix_cache
         self.spec = spec  # default SpecConfig for serve()/scheduler()
         self.chunk_size = chunk_size  # default chunked-prefill token budget
+        # serving tensor parallelism (DESIGN.md §5): a mesh with a 'model'
+        # axis head-partitions the paged pool and runs the decode/verify
+        # steps under shard_map. Head counts that do not divide the axis
+        # fall back LOUDLY to replicated serving via the ShardingRules
+        # drop-rule — tokens are identical either way, only the layout
+        # changes, so a warning (never silence, never a crash) is right.
+        self.mesh = self._check_mesh(mesh)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            # params are replicated once, up front: every rank slices its
+            # own head block inside the step, so no per-step weight moves
+            self.params = jax.device_put(
+                params, NamedSharding(self.mesh, P())
+            )
         # the decode/verify attention backend is resolved ONCE, here,
         # before anything is jitted (DESIGN.md §4): each backend gets its
         # own statically-bound jitted step family in ``self._steps``, so
         # switching backends (per serve()/scheduler() call) reuses that
         # backend's compiled executables and can never retarget — or
-        # retrace — another backend's traces.
-        self.attention_backend = kernel_ops.resolve_attention_backend(attention_backend)
+        # retrace — another backend's traces. Mesh-aware: on a non-TPU
+        # mesh "kernel" resolves to "interpret" (the kernel composes with
+        # shard_map per-shard instead of falling back to reference).
+        self.attention_backend = kernel_ops.resolve_attention_backend(
+            attention_backend, mesh=self.mesh
+        )
         # engine-owned jitted steps, shared by every scheduler this engine
         # makes: repeated generate()/serve() calls reuse the executables
         self._prefill = jax.jit(lambda p, t, **kw: model.prefill(p, t, max_seq, **kw))
@@ -101,6 +124,33 @@ class ServingEngine:
         self.stats = ServeStats()
         if decode_plan is not None:
             self.set_decode_plan(decode_plan)
+
+    def _check_mesh(self, mesh):
+        """The engine's serving mesh, or None after the loud GQA
+        fallback: head counts that don't divide the 'model' axis mean
+        ``ShardingRules`` drops the head mapping (recorded in its
+        ``fallbacks``), and the engine serves replicated — warned, never
+        silent, never wrong tokens."""
+        if mesh is None or mesh.shape.get("model", 1) == 1:
+            return mesh
+        from repro.parallel.sharding import ShardingRules
+
+        cfg = self.model.cfg
+        rules = ShardingRules(mesh, cfg)
+        tp = mesh.shape["model"]
+        if rules.table["kv_heads"] is None or cfg.n_heads % tp:
+            rules.fallbacks.append(
+                f"kv_heads:{cfg.n_kv_heads}/heads:{cfg.n_heads} ∤ mesh "
+                f"model({tp}); serving replicated"
+            )
+            log.warning(
+                "serving mesh dropped: n_kv_heads=%d/n_heads=%d do not "
+                "divide mesh axis 'model' (size %d) — serving replicated "
+                "(ShardingRules fallbacks: %s)",
+                cfg.n_kv_heads, cfg.n_heads, tp, rules.fallbacks,
+            )
+            return None
+        return mesh
 
     def _step_fns(self, backend: str) -> dict:
         """The jitted decode/verify family for ``backend``, built lazily
@@ -114,7 +164,11 @@ class ServingEngine:
     def _paged_fns(self, backend: str):
         fns = self._step_fns(backend)
         if "decode_paged" not in fns:
-            fns["decode_paged"] = self.model.jit_step("decode_step_paged", backend)
+            fns["decode_paged"] = (
+                self.model.sharded_paged_step("decode_step_paged", self.mesh, backend)
+                if self.mesh is not None
+                else self.model.jit_step("decode_step_paged", backend)
+            )
         if self._prefill_prefix is None:
             model, max_seq = self.model, self.max_seq
             self._prefill_prefix = jax.jit(
@@ -224,7 +278,11 @@ class ServingEngine:
         if "verify" not in fns:
             fns["verify"] = self.model.jit_step("verify_step", backend)
         if layout == "paged" and "verify_paged" not in fns:
-            fns["verify_paged"] = self.model.jit_step("verify_step_paged", backend)
+            fns["verify_paged"] = (
+                self.model.sharded_paged_step("verify_step_paged", self.mesh, backend)
+                if self.mesh is not None
+                else self.model.jit_step("verify_step_paged", backend)
+            )
         return fns["verify"], fns.get("verify_paged")
 
     def scheduler(
@@ -246,11 +304,17 @@ class ServingEngine:
         is retrace-free after first use. ``chunk_size`` overrides the
         engine's chunked-prefill budget (``0`` disables for this call)."""
         layout = kv_layout or self.kv_layout
+        if self.mesh is not None and layout != "paged":
+            raise ValueError(
+                "a serving mesh shards the paged block pool; the slotted "
+                "layout has no head-partitioned storage — use "
+                "kv_layout='paged' (or build the engine without mesh=)"
+            )
         spec = spec if spec is not None else self.spec
         chunk = chunk_size if chunk_size is not None else self.chunk_size
         chunk = None if not chunk else int(chunk)
         backend = kernel_ops.resolve_attention_backend(
-            attention_backend or self.attention_backend
+            attention_backend or self.attention_backend, mesh=self.mesh
         )
         if self._decode_plan is not None and backend != self.attention_backend:
             # the plan's per-request fn captured the engine backend when
@@ -270,6 +334,7 @@ class ServingEngine:
                 prefix_cache=self.prefix_cache,
                 paged_decode_fn=decode_paged,
                 prefix_prefill_fn=prefill_prefix,
+                mesh=self.mesh,
             )
         if spec is not None and spec.k > 0:
             verify, verify_paged = self._spec_fns(layout, backend)
@@ -308,6 +373,7 @@ class ServingEngine:
         spec=None,
         attention_backend: Optional[str] = None,
         chunk_size: Optional[int] = None,
+        mesh=None,
     ) -> dict:
         """Continuous-batching entry: drive ``requests`` (each with its
         own arrival time, prompt length, and token budget) to completion
@@ -316,7 +382,33 @@ class ServingEngine:
         ``spec`` usually comes from ``speculative.advise_depth``),
         optionally overriding the attention backend for this run, and
         optionally chunking prefill (``chunk_size`` tokens per step;
-        ``0`` forces monolithic). Returns rid → generated tokens."""
+        ``0`` forces monolithic). ``mesh`` must match the engine's
+        serving mesh (the sharded step family and the replicated params
+        are built against it at construction); passing it on a mesh-less
+        engine adopts it, provided no step has been jitted yet. Returns
+        rid → generated tokens."""
+        if mesh is not None and mesh is not self.mesh:
+            if self.mesh is not None:
+                raise ValueError(
+                    "serve(mesh=) differs from the engine's mesh — the "
+                    "sharded step family is built against the constructor "
+                    "mesh; create one engine per mesh"
+                )
+            if self._steps or self._prefill_prefix is not None:
+                raise ValueError(
+                    "serve(mesh=) after steps were jitted without a mesh — "
+                    "pass mesh= to the ServingEngine constructor instead"
+                )
+            self.mesh = self._check_mesh(mesh)
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                self.params = jax.device_put(
+                    self.params, NamedSharding(self.mesh, P())
+                )
+                self.attention_backend = kernel_ops.resolve_attention_backend(
+                    self.attention_backend, mesh=self.mesh
+                )
         requests = list(requests)
         mb = max_batch or self.max_batch or max(1, min(8, len(requests)))
         return self.scheduler(

@@ -28,6 +28,7 @@ import bisect
 import math
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -161,6 +162,7 @@ class PagedKVCache:
         num_blocks: Optional[int] = None,
         prefix_cache: bool = True,
         dtype=None,
+        mesh=None,
     ):
         self.model = model
         self.max_batch = int(max_batch)
@@ -182,6 +184,20 @@ class PagedKVCache:
         self.pool = model.init_paged_cache(
             self.num_blocks + 1, self.block_size, dtype=dtype
         )
+        # serving TP (DESIGN.md §5): allocate the pool head-partitioned
+        # over the mesh once — the sharded step's donation keeps every
+        # subsequent new_pool on the same NamedSharding, so KV bytes never
+        # migrate between ranks. Tables/lengths stay host-side numpy (they
+        # are data, replicated on upload by the step's in_specs).
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            specs = model.paged_pool_specs()
+            self.pool = {
+                name: jax.device_put(leaf, NamedSharding(mesh, specs[name]))
+                for name, leaf in self.pool.items()
+            }
         cfg = model.cfg
         # PREFIX_FAMILIES lives next to the model's prefill_with_prefix,
         # which enforces the same exclusions — the two layers can't
@@ -202,6 +218,15 @@ class PagedKVCache:
             (self.max_batch, self.blocks_per_row), self.null_block, np.int32
         )
         self.cache_len = np.zeros((self.max_batch,), np.int32)
+        # kernel_inputs() device views, invalidated by version counter:
+        # tables mutate only on admission / tail claim / truncate / free,
+        # so steady-state decode re-uploads ONLY the lengths vector
+        self._tables_version = 0
+        self._dev_tables = None
+        self._dev_tables_version = -1
+        self._len_version = 0
+        self._dev_len = None
+        self._dev_len_version = -1
         self._row_free: list[int] = list(range(self.max_batch))  # ascending
         self._row_owner: list[Optional[int]] = [None] * self.max_batch
         self._row_blocks: list[list[int]] = [[] for _ in range(self.max_batch)]
@@ -287,6 +312,8 @@ class PagedKVCache:
         self._outstanding_total += self._row_outstanding[row]
         self.block_tables[row, : len(blocks)] = blocks
         self.cache_len[row] = S
+        self._tables_version += 1
+        self._len_version += 1
         if register and self.prefix is not None and len(tokens) == S:
             # register the prompt's immutable full blocks (decode never
             # writes before position S, so blocks < S // bs stay frozen)
@@ -316,12 +343,21 @@ class PagedKVCache:
         sequence slot — which is exactly what
         ``Model.decode_step_paged``/``verify_step_paged`` (and the
         block-paged Pallas kernel underneath) consume; the extra block
-        is the null block dead rows write into."""
-        return (
-            self.pool,
-            jnp.asarray(self.block_tables),
-            jnp.asarray(self.cache_len),
-        )
+        is the null block dead rows write into.
+
+        The device views are cached against mutation-version counters:
+        block tables change only on admission / lazy tail claim /
+        truncate / free, so a steady decode step re-uploads nothing but
+        the per-row lengths vector — O(max_batch) int32 per step, not
+        O(max_batch · blocks_per_row) (the regression test asserts
+        table-object identity across pure-decode steps)."""
+        if self._dev_tables_version != self._tables_version:
+            self._dev_tables = jnp.asarray(self.block_tables)
+            self._dev_tables_version = self._tables_version
+        if self._dev_len_version != self._len_version:
+            self._dev_len = jnp.asarray(self.cache_len)
+            self._dev_len_version = self._len_version
+        return (self.pool, self._dev_tables, self._dev_len)
 
     def gather_prefix(self, hit_ids: list[int]):
         """(k, v) [L, 1, h, KV, hd] — a hit chain's post-RoPE KV rows,
@@ -398,17 +434,20 @@ class PagedKVCache:
             b = self.allocator.alloc()
             self._row_blocks[row].append(b)
             self.block_tables[row, bi] = b
+            self._tables_version += 1
             self._row_outstanding[row] -= 1
             self._outstanding_total -= 1
 
     def advance(self, row: int) -> None:
         self.cache_len[row] += 1
+        self._len_version += 1
 
     def advance_n(self, row: int, n: int) -> None:
         """Account ``n`` KV entries written by one verify call (the
         pending token + K drafts); ``truncate_row`` then rewinds the
         rejected tail."""
         self.cache_len[row] += n
+        self._len_version += 1
 
     def truncate_row(self, row: int, n_rejected: int) -> None:
         """Rewind ``n_rejected`` rejected draft entries off the row's
@@ -424,6 +463,7 @@ class PagedKVCache:
         new_len = int(self.cache_len[row]) - int(n_rejected)
         assert new_len >= 0, "truncate below zero"
         self.cache_len[row] = new_len
+        self._len_version += 1
         keep = self.blocks_for(new_len)
         while len(self._row_blocks[row]) > keep:
             b = self._row_blocks[row].pop()
@@ -432,6 +472,7 @@ class PagedKVCache:
             ), "truncate reached a shared/registered block"
             self.allocator.free(b)
             self.block_tables[row, len(self._row_blocks[row])] = self.null_block
+            self._tables_version += 1
             self._row_outstanding[row] += 1
             self._outstanding_total += 1
 
@@ -455,6 +496,8 @@ class PagedKVCache:
         self._row_owner[row] = None
         self.block_tables[row, :] = self.null_block
         self.cache_len[row] = 0
+        self._tables_version += 1
+        self._len_version += 1
         bisect.insort(self._row_free, row)
 
     def preempt_row(self, row: int, tokens=None) -> None:

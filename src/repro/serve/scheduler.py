@@ -123,6 +123,7 @@ class Scheduler:
         paged_verify_fn=None,
         chunk_prefill_fn=None,
         plan_step_cache: Optional[dict] = None,
+        mesh=None,
     ):
         self.model = model
         self.params = params
@@ -145,6 +146,7 @@ class Scheduler:
                 block_size=block_size,
                 num_blocks=num_blocks,
                 prefix_cache=prefix_cache,
+                mesh=mesh,
             )
         else:
             self.kv = SlotKVCache(model, max_batch, max_seq)

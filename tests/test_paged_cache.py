@@ -245,6 +245,46 @@ def test_paged_cache_admission_lifecycle_invariants(served):
         kv.free_row(row)
 
 
+def test_kernel_inputs_hoists_invariant_device_views(served):
+    """``kernel_inputs()`` re-uploads only what actually changed: across
+    pure decode steps (advance only) the device block-table view is the
+    SAME object — zero per-step host allocations beyond the lengths
+    vector — and table mutations (admit / lazy tail claim / truncate /
+    free) each invalidate exactly the table view."""
+    _, m, _, _ = served
+    kv = PagedKVCache(m, max_batch=2, max_seq=16, block_size=4, num_blocks=8)
+    row, _ = kv.try_admit(0, (1, 2, 3), budget=8)
+    _, t0, l0 = kv.kernel_inputs()
+    # same state → identical objects, no re-upload at all
+    _, t1, l1 = kv.kernel_inputs()
+    assert t1 is t0 and l1 is l0
+    # steady decode inside a block: lengths refresh, tables do not
+    kv.ensure_tail(row)  # block 0 already covers position 3
+    kv.advance(row)
+    _, t2, l2 = kv.kernel_inputs()
+    assert t2 is t0, "pure advance must not re-upload the block tables"
+    assert l2 is not l0
+    np.testing.assert_array_equal(np.asarray(l2), kv.cache_len)
+    # crossing a block boundary claims a tail block → tables invalidate
+    kv.advance(row)  # len 5: next write position enters block 1
+    kv.ensure_tail(row)
+    _, t3, _ = kv.kernel_inputs()
+    assert t3 is not t0
+    np.testing.assert_array_equal(np.asarray(t3), kv.block_tables)
+    # speculative rewind releases the claimed tail block → tables invalidate
+    kv.advance_n(row, 3)
+    kv.truncate_row(row, 4)
+    _, t4, l4 = kv.kernel_inputs()
+    assert t4 is not t3
+    np.testing.assert_array_equal(np.asarray(t4), kv.block_tables)
+    np.testing.assert_array_equal(np.asarray(l4), kv.cache_len)
+    # retire → tables and lengths both invalidate
+    kv.free_row(row)
+    _, t5, l5 = kv.kernel_inputs()
+    assert t5 is not t4 and l5 is not l4
+    np.testing.assert_array_equal(np.asarray(t5), kv.block_tables)
+
+
 def test_paged_cache_rejects_non_attention_family():
     cfg = get_config("mamba2-370m").reduced()
     m = Model(cfg)

@@ -97,6 +97,29 @@ print("PASS")
 """)
 
 
+def test_distributed_softmax_combine():
+    """Per-rank flash partials over a kv-sequence split combine to the
+    exact global softmax-weighted sum (DESIGN.md §5 derivation)."""
+    _run(HEADER + """
+from repro.parallel.collectives import distributed_softmax
+B, H, S, d = 2, 4, 32, 8
+logits = jax.random.normal(jax.random.key(0), (B, H, S)) * 4.0
+v = jax.random.normal(jax.random.key(1), (B, H, S, d))
+want = jnp.einsum("bhs,bhsd->bhd", jax.nn.softmax(logits, axis=-1), v)
+def local(lg, vl):
+    m = lg.max(-1)
+    p = jnp.exp(lg - m[..., None])
+    acc = jnp.einsum("bhs,bhsd->bhd", p, vl)
+    return distributed_softmax(m, p.sum(-1), acc, "model")
+fn = shard_map(local, mesh=mesh,
+               in_specs=(P(None, None, "model"), P(None, None, "model", None)),
+               out_specs=P(), check_vma=False)
+np.testing.assert_allclose(np.asarray(fn(logits, v)), np.asarray(want),
+                           atol=1e-5, rtol=1e-5)
+print("PASS")
+""")
+
+
 def test_pipeline_two_stage():
     _run(HEADER.replace('(2, 4), ("data", "model")', '(2, 2, 2), ("pod", "data", "model")').replace("*2", "*3") + """
 from repro.parallel.pipeline import pipelined_apply
