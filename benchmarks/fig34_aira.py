@@ -63,6 +63,22 @@ def realized_gain(b, data, decision) -> float:
     return serial_orig / p.smt2 - 1.0
 
 
+def flag_regressions(rows) -> list:
+    """Predicted-vs-realized sign gate (in place, returned for chaining):
+    a row the gate ACCEPTED on a positive predicted gain whose realized
+    model says it got *slower* is flagged ``regressed: True``. The
+    ``accepted`` bit is deliberately kept — the forced rows reproduce the
+    paper's Fig. 4 (accept-then-regret is the datum) — but the flag makes
+    the sign disagreement machine-readable instead of a footnote in the
+    decision column, so downstream consumers (BENCH diffing, the adviser's
+    calibration loop) never mistake a forced regression for a win."""
+    for r in rows:
+        r["regressed"] = bool(
+            r["accepted"] and r["predicted"] > 0 and r["realized"] < 0
+        )
+    return rows
+
+
 def _wall(thunk, reps=3) -> float:
     jax.block_until_ready(thunk())  # compile + warm
     t0 = time.perf_counter()
@@ -100,12 +116,13 @@ def run(print_fn=print, timing: bool = True):
             )
         )
 
+    flag_regressions(rows)
     print_fn("# Fig.3/4 — Aira end-to-end on 10 latency-critical benchmarks")
     print_fn("benchmark,decision,predicted,realized_model,wall_serial_ms,wall_restruct_ms")
     for r in rows:
         dec = "accept" if r["accepted"] else "reject(gate)"
-        if r["accepted"] and r["realized"] < 0:
-            dec = "accept(forced)"
+        if r["regressed"]:
+            dec = "accept(forced,regressed)"
         print_fn(
             f"{r['name']},{dec},{r['predicted']*100:+.1f}%,{r['realized']*100:+.1f}%,"
             f"{r['wall_serial_ms']:.2f},{r['wall_restructured_ms']:.2f}"

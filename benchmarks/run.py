@@ -67,6 +67,10 @@ def write_summary(rows, gm_pos, gm_all, ubench_us, serving=None, path="BENCH_air
                 "schedule": r["schedule"],
                 "predicted_gain": r["predicted"],
                 "realized_gain_model": r["realized"],
+                # predicted-vs-realized sign gate (fig34_aira.flag_
+                # regressions): accepted on a positive prediction but
+                # realized negative — Fig. 4's forced rows carry it
+                "regressed": r.get("regressed", False),
                 "ubench_serial_us": ubench_us.get(r["name"]),
             }
             for r in rows

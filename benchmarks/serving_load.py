@@ -50,14 +50,17 @@ p99-step contract asserted here. The CI smoke contract: nonzero
 preemptions under overload, nonzero goodput, and a strictly smaller
 chunked p99 step.
 
-The sharded mode (``run_sharded`` / ``--mesh N``) serves one identical
-open-loop workload at every power-of-two mesh size up to N through the
-head-partitioned tensor-parallel paged path (DESIGN.md §5): the paged
-pool's KV leaves are sharded head-wise over a ``("model",)`` mesh and
-decode/verify run per-shard under ``shard_map``. Bitwise token identity
-against the single-device paged engine is asserted for plain,
-speculative (K=2), and chunked-prefill serving — head partitioning
-moves parallel work, never a reduction order — and per-decode-step
+The sharded mode (``run_sharded`` / ``--mesh N`` or ``--mesh NxM``)
+serves one identical open-loop workload at every mesh shape through the
+mesh-sharded paged path (DESIGN.md §5): head-only ``("model",)`` sizes
+shard the paged pool's KV leaves head-wise, kv-sequence shapes
+(``("seq",)`` and the 2D ``("model","seq")`` composition) partition the
+pool's block dimension and recombine each softmax from per-rank flash
+partials. Bitwise token identity against the single-device paged engine
+is asserted for the head-only sizes, for plain, speculative (K=2), and
+chunked-prefill serving — head partitioning moves parallel work, never
+a reduction order — while the seq lanes assert argmax token identity
+(the exact-combine tolerance contract); per-decode-step
 latency is recorded per mesh size. When the process has fewer devices
 than the largest mesh (the normal single-device CI run), the sweep
 re-execs itself in a subprocess with a forced multi-device CPU host
@@ -512,28 +515,45 @@ def run_sharded(
     max_batch: int = 4,
     tokens: int = 8,
     mesh_sizes=(1, 2, 4),
+    seq_shapes=((2,), (2, 2)),
     backend: str = "interpret",
     seed: int = 0,
     print_fn=print,
 ) -> dict:
-    """One workload, every mesh size: the tensor-parallel paged serving
-    path (DESIGN.md §5) vs the single-device paged engine. Per mesh
-    size the same open-loop arrivals are served plain, speculative
-    (K=2, n-gram drafter), and with chunked prefill; all three streams
-    are asserted BITWISE identical to the mesh-less run (head
-    partitioning + all-gather preserves every reduction order), and
-    per-decode-step latency is recorded from the plain serve. The
+    """One workload, every mesh shape: the mesh-sharded paged serving
+    path (DESIGN.md §5) vs the single-device paged engine. Two lanes:
+
+    * ``mesh_sizes`` — head-only ``("model",)`` meshes. Per size the
+      same open-loop arrivals are served plain, speculative (K=2,
+      n-gram drafter), and with chunked prefill; all three streams are
+      asserted BITWISE identical to the mesh-less run (head
+      partitioning + all-gather preserves every reduction order).
+    * ``seq_shapes`` — kv-sequence-split shapes: ``(sp,)`` serves over
+      a pure ``("seq",)`` mesh, ``(tp, sp)`` over the 2D
+      ``("model", "seq")`` composition. These recombine each softmax
+      from per-rank flash partials (``distributed_softmax``), so the
+      lane's contract is the tolerance one: argmax token identity
+      (greedy streams match exactly) rather than bitwise logits. The
+      per-shape step latency lands under the summary's ``"seq"`` key
+      (→ ``serving.sharded.seq`` in BENCH).
+
+    Per-decode-step latency is recorded from each plain serve. The
     default ``interpret`` backend runs the real block-paged kernel code
     per-shard on CPU (the CI smoke contract). Latency across forced CPU
     host-platform "devices" shares the same cores, so the numbers track
     dispatch/collective overhead, not speedup — the contract asserted
     here is identity, the latency is reported."""
-    need = max(mesh_sizes)
+    seq_shapes = tuple(tuple(s) for s in seq_shapes)
+    need = max(
+        max(mesh_sizes),
+        max((int(np.prod(s)) for s in seq_shapes), default=1),
+    )
     if need > 1 and len(jax.devices()) < need:
         return _run_sharded_subprocess(
             dict(arch=arch, n_requests=n_requests, rate_rps=rate_rps,
                  max_batch=max_batch, tokens=tokens,
-                 mesh_sizes=tuple(mesh_sizes), backend=backend, seed=seed),
+                 mesh_sizes=tuple(mesh_sizes), seq_shapes=seq_shapes,
+                 backend=backend, seed=seed),
             need, print_fn,
         )
 
@@ -562,7 +582,7 @@ def run_sharded(
         ("speculative", {"spec": SpecConfig(k=2, drafter="ngram")}),
         ("chunked", {"chunk_size": 4}),
     )
-    results, outputs = {}, {}
+    results, outputs, base_raw = {}, {}, {}
     for tp in mesh_sizes:
         if tp > 1:
             try:
@@ -585,6 +605,8 @@ def run_sharded(
             reqs = workload()
             out = engine.serve(reqs, max_batch=max_batch, seed=seed, **kw)
             outputs[tp][mode] = [np.asarray(out[r.rid]) for r in reqs]
+            if tp == mesh_sizes[0]:
+                base_raw[mode] = out
             if mode == "plain":
                 s = engine.stats.serving_summary()
                 results[f"tp{tp}"] = {
@@ -603,6 +625,40 @@ def run_sharded(
                             f"single-device paged path",
                 )
 
+    # kv-sequence-split lane: pure ("seq",) and 2D ("model","seq")
+    # shapes, tolerance contract — argmax token identity via the shared
+    # serve-level differential (repro.serve.differential)
+    from repro.serve.differential import assert_streams_equal
+
+    seq_results = {}
+    for shape in seq_shapes:
+        names = ("seq",) if len(shape) == 1 else ("model", "seq")
+        key = "x".join(f"{n}{s}" for n, s in zip(names, shape))
+        try:
+            mesh = jax.make_mesh(
+                shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
+            )
+        except AttributeError:  # jax 0.4.x: no AxisType
+            mesh = jax.make_mesh(shape, names)
+        engine = ServingEngine(
+            model, params, max_seq=64, kv_layout="paged", mesh=mesh,
+            attention_backend=backend,
+        )
+        assert engine.mesh is mesh, "seq-split sweep fell back to replicated"
+        for mode, kw in modes:
+            engine.serve(workload(), max_batch=max_batch, seed=seed, **kw)  # warm
+            out = engine.serve(workload(), max_batch=max_batch, seed=seed, **kw)
+            assert_streams_equal(
+                base_raw[mode], out, label=f"mesh={key} {mode}"
+            )
+            if mode == "plain":
+                s = engine.stats.serving_summary()
+                seq_results[key] = {
+                    "p50_step_ms": s["p50_step_ms"],
+                    "p99_step_ms": s["p99_step_ms"],
+                    "p50_tpot_ms": s["p50_tpot_ms"],
+                }
+
     summary = {
         "arch": arch,
         "mesh_sizes": list(mesh_sizes),
@@ -610,11 +666,18 @@ def run_sharded(
         "identity": "bitwise (plain, speculative K=2, chunked)",
         **results,
     }
+    if seq_results:
+        summary["seq"] = {
+            "shapes": ["x".join(map(str, s)) for s in seq_shapes],
+            "identity": "argmax token identity (tolerance lane, "
+                        "exact flash-partials combine)",
+            **seq_results,
+        }
     print_fn("# serving — mesh-sharded paged decode (token-identity asserted)")
     print_fn(
         f"arch={arch} requests={n_requests} tokens={tokens} pool={max_batch} "
         f"heads={cfg.n_heads}/{cfg.n_kv_heads} backend={backend} "
-        f"mesh_sizes={list(mesh_sizes)}"
+        f"mesh_sizes={list(mesh_sizes)} seq_shapes={list(seq_shapes)}"
     )
     for tp in mesh_sizes:
         r = results[f"tp{tp}"]
@@ -622,7 +685,13 @@ def run_sharded(
             f"mesh={tp}: step p50={r['p50_step_ms']:.2f}ms "
             f"p99={r['p99_step_ms']:.2f}ms tpot p50={r['p50_tpot_ms']:.2f}ms"
         )
-    print_fn("token identity: plain + speculative(K=2) + chunked — bitwise")
+    for key, r in seq_results.items():
+        print_fn(
+            f"mesh={key}: step p50={r['p50_step_ms']:.2f}ms "
+            f"p99={r['p99_step_ms']:.2f}ms tpot p50={r['p50_tpot_ms']:.2f}ms"
+        )
+    print_fn("token identity: plain + speculative(K=2) + chunked — "
+             "bitwise (model), argmax tokens (seq lanes)")
     return summary
 
 
@@ -806,12 +875,15 @@ if __name__ == "__main__":
     ap.add_argument("--overload", action="store_true",
                     help="with --chunked: under-provision the paged pool so "
                          "preemption fires (CI overload smoke)")
-    ap.add_argument("--mesh", metavar="N", type=int, default=None,
-                    help="sharded mode: serve one workload at every "
+    ap.add_argument("--mesh", metavar="N[xM]", default=None,
+                    help="sharded mode. N: serve one workload at every "
                          "power-of-two mesh size up to N through the "
                          "head-partitioned paged path, asserting bitwise "
                          "token identity vs single-device (CI multi-device "
-                         "smoke: --mesh 4)")
+                         "smoke: --mesh 4). NxM: a 2D ('model','seq') sweep "
+                         "— head-only N (bitwise), seq-only M and NxM "
+                         "(argmax token identity, the kv-sequence-split "
+                         "tolerance lane; CI smoke: --mesh 2x2)")
     args = ap.parse_args()
     if args.shared_prefix:
         run_shared_prefix()
@@ -822,11 +894,16 @@ if __name__ == "__main__":
     elif args.chunked:
         run_slo(overload=args.overload)
     elif args.mesh:
-        run_sharded(
-            mesh_sizes=tuple(
-                2 ** i for i in range(args.mesh.bit_length())
-                if 2 ** i <= args.mesh
+        if "x" in args.mesh:
+            tp, sp = (int(v) for v in args.mesh.split("x"))
+            run_sharded(mesh_sizes=(1, tp), seq_shapes=((sp,), (tp, sp)))
+        else:
+            n = int(args.mesh)
+            run_sharded(
+                mesh_sizes=tuple(
+                    2 ** i for i in range(n.bit_length()) if 2 ** i <= n
+                ),
+                seq_shapes=(),
             )
-        )
     else:
         run()

@@ -242,6 +242,48 @@ def paged_attention(
     )
 
 
+def paged_attention_partials(
+    q, k_pool, v_pool, block_tables, lengths, owned,
+    k_scale=None, v_scale=None, *, mode="auto",
+):
+    """Partials-emitting sibling of ``paged_attention`` for the
+    kv-sequence-split serving path: same inputs on a LOCAL pool shard
+    plus ``owned`` [B, MB] block ownership, returning the unnormalized
+    flash triple ``(m, l, acc)`` for ``collectives.distributed_softmax``
+    to combine across the seq mesh axis. Kernel-backend only — the
+    reference partials live in ``models/attention.paged_flash_partials``
+    (this wrapper is reached with the registry resolved to a kernel
+    mode). Called inside shard_map bodies, so unlike ``paged_attention``
+    there is no jit wrapper of its own — the enclosing step is the jit
+    boundary."""
+    if mode == "ref":
+        mode = "reference"
+    mode = resolve_attention_backend(mode)
+    if mode == "reference":
+        raise ValueError(
+            "paged_attention_partials is the kernel-backend surface; the "
+            "reference partials are models/attention.paged_flash_partials"
+        )
+    itemsize = jnp.dtype(q.dtype).itemsize
+    T, hd = q.shape[1], q.shape[3]
+    BS = k_pool.shape[1]
+    g = q.shape[2] // k_pool.shape[2]
+    check_vmem(
+        {
+            "q": T * g * hd * itemsize,
+            "k": BS * hd * jnp.dtype(k_pool.dtype).itemsize,
+            "v": BS * hd * jnp.dtype(v_pool.dtype).itemsize,
+            "acc": T * g * hd * 4,
+            "s": T * g * BS * 4,
+        }
+    )
+    return _paged_kernel(
+        q, k_pool, v_pool, block_tables, lengths,
+        k_scale=k_scale, v_scale=v_scale, owned=owned, partials=True,
+        interpret=mode == "interpret",
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("mode",))
 def _paged_attention_impl(
     q, k_pool, v_pool, block_tables, lengths, k_scale, v_scale, *, mode

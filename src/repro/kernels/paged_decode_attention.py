@@ -24,7 +24,6 @@ blocks), halving the streamed bytes vs a dense bf16 gather.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -54,6 +53,9 @@ def _paged_kernel(
     g,
     ks_ref=None,  # [1, BS, 1] per-vector scales (int8 pools)
     vs_ref=None,
+    own_ref=None,  # [B, MB] int32 ownership (scalar prefetch, seq split)
+    om_ref=None,  # [1, 1, T·g, 1] partials outputs (seq split)
+    ol_ref=None,
 ):
     b = pl.program_id(0)
     mb = pl.program_id(2)
@@ -66,8 +68,15 @@ def _paged_kernel(
 
     base = len_ref[b]  # committed length; query t sees pos < base + t + 1
     # skip blocks wholly past the last query's window ("memory thread"
-    # stops streaming dead data — Relic's early task retire)
-    @pl.when(mb * bs < base + t)
+    # stops streaming dead data — Relic's early task retire). Under the
+    # kv-sequence split, blocks this rank's shard does not own are
+    # skipped the same way — ownership is block-granular, so the mask
+    # needs no per-position term
+    live = mb * bs < base + t
+    if own_ref is not None:
+        live = jnp.logical_and(live, own_ref[b, mb] != 0)
+
+    @pl.when(live)
     def _step():
         q = q_ref[0, 0]  # [T·g, hd]
         k = k_ref[0, :, 0]  # [BS, hd]
@@ -99,9 +108,18 @@ def _paged_kernel(
 
     @pl.when(mb == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
-            o_ref.dtype
-        )
+        if om_ref is None:
+            o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+                o_ref.dtype
+            )
+        else:
+            # partials mode: emit the unnormalized flash triple — the
+            # cross-rank distributed_softmax combine normalizes. An
+            # all-skipped shard flushes (NEG, 0, 0), which the combine's
+            # empty-shard guard scales to exactly zero
+            o_ref[0, 0] = acc_ref[...]
+            om_ref[0, 0] = m_ref[...]
+            ol_ref[0, 0] = l_ref[...]
 
 
 def paged_decode_attention(
@@ -113,12 +131,22 @@ def paged_decode_attention(
     *,
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
+    owned: jax.Array | None = None,
+    partials: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """q [B,T,H,hd]; pools [NB,BS,KV,hd]; tables [B,MB] int32 block ids;
     lengths [B] committed lengths (query t valid positions are
     < lengths + t + 1) → out [B,T,H,hd]. int8 pools pass per-vector
-    ``k_scale``/``v_scale`` [NB,BS,KV] and dequantize in-kernel."""
+    ``k_scale``/``v_scale`` [NB,BS,KV] and dequantize in-kernel.
+
+    kv-sequence split (DESIGN.md §5): ``owned`` [B, MB] marks the table
+    entries whose blocks live in this rank's pool shard (unowned entries
+    must already point at a safe local scratch slot — they are skipped,
+    never streamed into the softmax). ``partials=True`` returns the
+    unnormalized flash triple ``(m [B,T,H], l [B,T,H], acc [B,T,H,hd]
+    float32)`` instead of the normalized output, for the cross-rank
+    ``distributed_softmax`` combine."""
     B, T, H, hd = q.shape
     NB, BS, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
     MB = block_tables.shape[1]
@@ -131,51 +159,86 @@ def paged_decode_attention(
     qr = q.reshape(B, T, KV, g, hd).transpose(0, 2, 1, 3, 4).reshape(B, KV, T * g, hd)
 
     grid = (B, KV, MB)
+    # index maps take *pref so one lambda serves both prefetch layouts
+    # (tbl, lens) and (tbl, lens, owned)
     kv_spec = pl.BlockSpec(
-        (1, BS, 1, hd), lambda b, kv, mb, tbl, lens: (tbl[b, mb], 0, kv, 0)
+        (1, BS, 1, hd), lambda b, kv, mb, *pref: (pref[0][b, mb], 0, kv, 0)
     )
-    in_specs = [
-        pl.BlockSpec((1, 1, T * g, hd), lambda b, kv, mb, tbl, lens: (b, kv, 0, 0)),
-        kv_spec,
-        kv_spec,
-    ]
+    q_spec = pl.BlockSpec((1, 1, T * g, hd), lambda b, kv, mb, *pref: (b, kv, 0, 0))
+    in_specs = [q_spec, kv_spec, kv_spec]
     operands = [qr, k_pool, v_pool]
     if quant:
         sc_spec = pl.BlockSpec(
-            (1, BS, 1), lambda b, kv, mb, tbl, lens: (tbl[b, mb], 0, kv)
+            (1, BS, 1), lambda b, kv, mb, *pref: (pref[0][b, mb], 0, kv)
         )
         in_specs += [sc_spec, sc_spec]
         operands += [k_scale, v_scale]
 
-    if quant:
-        # scale refs arrive positionally after v; rebind them as keywords
-        def kernel(tbl, lens, qf, kf, vf, ksf, vsf, of, mf, lf, accf):
-            return _paged_kernel(
-                tbl, lens, qf, kf, vf, of, mf, lf, accf,
-                scale=scale, bs=BS, t=T, g=g, ks_ref=ksf, vs_ref=vsf,
-            )
+    prefetch = [block_tables.astype(jnp.int32), lengths.astype(jnp.int32)]
+    if owned is not None:
+        prefetch.append(owned.astype(jnp.int32))
+
+    if partials:
+        ml_spec = pl.BlockSpec((1, 1, T * g, 1), lambda b, kv, mb, *pref: (b, kv, 0, 0))
+        out_specs = (q_spec, ml_spec, ml_spec)
+        out_shape = (
+            jax.ShapeDtypeStruct((B, KV, T * g, hd), jnp.float32),  # acc
+            jax.ShapeDtypeStruct((B, KV, T * g, 1), jnp.float32),  # m
+            jax.ShapeDtypeStruct((B, KV, T * g, 1), jnp.float32),  # l
+        )
     else:
-        kernel = functools.partial(_paged_kernel, scale=scale, bs=BS, t=T, g=g)
+        out_specs = q_spec
+        out_shape = jax.ShapeDtypeStruct((B, KV, T * g, hd), q.dtype)
+
+    n_pref = len(prefetch)
+    n_in = len(operands)
+    n_out = 3 if partials else 1
+
+    def kernel(*refs):
+        tbl, lens = refs[0], refs[1]
+        own = refs[2] if owned is not None else None
+        i = n_pref
+        qf, kf, vf = refs[i : i + 3]
+        i += 3
+        ksf, vsf = (refs[i], refs[i + 1]) if quant else (None, None)
+        i = n_pref + n_in
+        of = refs[i]
+        omf, olf = (refs[i + 1], refs[i + 2]) if partials else (None, None)
+        mf, lf, accf = refs[i + n_out : i + n_out + 3]
+        return _paged_kernel(
+            tbl, lens, qf, kf, vf, of, mf, lf, accf,
+            scale=scale, bs=BS, t=T, g=g, ks_ref=ksf, vs_ref=vsf,
+            own_ref=own, om_ref=omf, ol_ref=olf,
+        )
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=n_pref,
             grid=grid,
             in_specs=in_specs,
-            out_specs=pl.BlockSpec(
-                (1, 1, T * g, hd), lambda b, kv, mb, tbl, lens: (b, kv, 0, 0)
-            ),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((T * g, 1), jnp.float32),
                 pltpu.VMEM((T * g, 1), jnp.float32),
                 pltpu.VMEM((T * g, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, KV, T * g, hd), q.dtype),
+        out_shape=out_shape,
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
-    return out.reshape(B, KV, T, g, hd).transpose(0, 2, 1, 3, 4).reshape(B, T, H, hd)
+    )(*prefetch, *operands)
+
+    def heads_out(x, d):
+        return x.reshape(B, KV, T, g, d).transpose(0, 2, 1, 3, 4).reshape(B, T, H, d)
+
+    if not partials:
+        return heads_out(out, hd)
+    acc, m, l = out
+    return (
+        heads_out(m, 1).reshape(B, T, H),
+        heads_out(l, 1).reshape(B, T, H),
+        heads_out(acc, hd),
+    )

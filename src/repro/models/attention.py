@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kernel_ops
 from repro.models.layers import apply_rope, constrain, normal, rope_tables
+from repro.parallel.collectives import distributed_softmax
 
 NEG = -1e30
 
@@ -310,6 +311,62 @@ def paged_attention(
     return _cached_attention(q, kd, vd, cache_len, rules=rules, backend="reference")
 
 
+def paged_flash_partials(
+    q, k_pool, v_pool, block_tables, cache_len, owned,
+    *, k_scale=None, v_scale=None, backend=None,
+):
+    """Per-rank flash running-form partials for kv-sequence-split serving.
+
+    Same inputs as ``paged_attention`` on a LOCAL pool shard, with the
+    tables already localized to this rank (unowned entries point at the
+    rank's scratch block) and ``owned`` [B, MB] marking which table
+    entries this rank's shard actually holds. Returns the unnormalized
+    flash triple over owned positions only —
+
+        m   [B, T, H]      running max of the masked logits
+        l   [B, T, H]      Σ exp(logit − m)
+        acc [B, T, H, hd]  Σ exp(logit − m) · v   (float32)
+
+    — for ``collectives.distributed_softmax`` to combine across the seq
+    mesh axis. A rank holding zero valid positions for a row reports the
+    NEG sentinel / zero / zeros, which the combine's empty-shard guard
+    turns into scale 0 (DESIGN.md §5). Kernel backends run the paged
+    kernel's partials mode; the reference path mirrors the
+    decode/verify masked softmax with the ownership mask folded in.
+    """
+    if kernel_ops.resolve_attention_backend(backend) != "reference":
+        return kernel_ops.paged_attention_partials(
+            q, k_pool, v_pool, block_tables, cache_len, owned,
+            k_scale, v_scale, mode=backend,
+        )
+    kd = gather_block_rows(k_pool[None], block_tables)[0]  # [B, MB·BS, KV, hd]
+    vd = gather_block_rows(v_pool[None], block_tables)[0]
+    if k_scale is not None:
+        kd = dequantize_kv(kd, gather_block_rows(k_scale[None], block_tables)[0], q.dtype)
+        vd = dequantize_kv(vd, gather_block_rows(v_scale[None], block_tables)[0], q.dtype)
+    B, T, H, hd = q.shape
+    S, KV = kd.shape[1], kd.shape[2]
+    bs = S // block_tables.shape[1]
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, T, KV, g, hd)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, kd).astype(jnp.float32) * scale
+    pos_ok = (
+        jnp.arange(S)[None, None, :]
+        < (cache_len[:, None] + jnp.arange(T)[None, :] + 1)[:, :, None]
+    )  # [B, T, S] — query t attends positions < cache_len + t + 1
+    own_ok = jnp.repeat(owned, bs, axis=1)  # [B, MB] → per-position [B, S]
+    valid = pos_ok & own_ok[:, None, :]
+    s = jnp.where(valid[:, None, None, :, :], s, NEG)
+    m = s.max(axis=-1)  # [B, KV, g, T]
+    p = jnp.where(valid[:, None, None, :, :], jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgts,bskd->btkgd", p, vd.astype(jnp.float32))
+    m = m.transpose(0, 3, 1, 2).reshape(B, T, H)
+    l = l.transpose(0, 3, 1, 2).reshape(B, T, H)
+    return m, l, acc.reshape(B, T, H, hd)
+
+
 def block_write_positions(block_tables, cache_len, t, block_size):
     """Per-row (physical block id, in-block offset), each [B, t], for
     the ``t`` write positions starting at each row's committed length —
@@ -464,6 +521,7 @@ def attention_block(
     prefix_kv=None,
     backend=None,
     tp_axis=None,
+    seq_axis=None,
 ):
     """Pre-norm'd GQA attention. Returns (out, new_cache_kv).
 
@@ -535,6 +593,18 @@ def attention_block(
         tables, li = cache["tables"], cache["li"]
         bs = cache["k"].shape[2]
         T = k.shape[1]
+        owned = None
+        if seq_axis is not None:
+            # kv-sequence split (shard_map body): the pool leaves here are
+            # this rank's block-dim shard. Localize the replicated tables
+            # — owned entries become local slot ids, unowned entries the
+            # rank's scratch slot — so writes land on the owner (scratch
+            # elsewhere) and attention knows which positions are real.
+            from repro.serve.kv_cache import local_table_view
+
+            tables, owned = local_table_view(
+                tables, cache["k"].shape[1], jax.lax.axis_index(seq_axis)
+            )
         bid, off = block_write_positions(tables, cache_len, T, bs)
         quant = "k_scale" in cache
         if quant:
@@ -550,17 +620,35 @@ def attention_block(
         leaf = lambda name: jax.lax.dynamic_index_in_dim(
             stacks[name], li, 0, keepdims=False
         )
-        out = paged_attention(
-            q,
-            leaf("k"),
-            leaf("v"),
-            tables,
-            cache_len,
-            k_scale=leaf("k_scale") if quant else None,
-            v_scale=leaf("v_scale") if quant else None,
-            rules=rules,
-            backend=backend,
-        )
+        if owned is None:
+            out = paged_attention(
+                q,
+                leaf("k"),
+                leaf("v"),
+                tables,
+                cache_len,
+                k_scale=leaf("k_scale") if quant else None,
+                v_scale=leaf("v_scale") if quant else None,
+                rules=rules,
+                backend=backend,
+            )
+        else:
+            # each rank attends over its owned positions only; the exact
+            # combine (with the empty-shard guard) reassembles the global
+            # softmax across the seq mesh axis — rounding-level, not
+            # bitwise (DESIGN.md §5)
+            m_p, l_p, acc_p = paged_flash_partials(
+                q,
+                leaf("k"),
+                leaf("v"),
+                tables,
+                cache_len,
+                owned,
+                k_scale=leaf("k_scale") if quant else None,
+                v_scale=leaf("v_scale") if quant else None,
+                backend=backend,
+            )
+            out = distributed_softmax(m_p, l_p, acc_p, seq_axis).astype(q.dtype)
         new_kv = tuple(stacks[name] for name, _ in writes)
     elif len(cache) == 5:
         # int8-quantized stacked cache: (k_all int8, k_scale, v_all int8,

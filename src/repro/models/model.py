@@ -27,6 +27,7 @@ from repro.models.layers import (
     rms_norm,
     swiglu,
 )
+from repro.parallel import sharding as sharding_mod
 from repro.parallel.sharding import ShardingRules
 
 ATTN_FAMILIES = ("dense", "moe", "audio", "vlm")
@@ -93,7 +94,7 @@ def _dtype(cfg):
 class Model:
     """Functional model wrapper: all methods are pure and jit-friendly."""
 
-    def __init__(self, cfg: ModelConfig, mesh=None, tp_axis=None):
+    def __init__(self, cfg: ModelConfig, mesh=None, tp_axis=None, seq_axis=None):
         self.cfg = cfg
         self.mesh = mesh
         self.rules = ShardingRules(mesh, cfg) if mesh is not None else None
@@ -102,6 +103,12 @@ class Model:
         # None so the kernel backend engages per-shard); attention gathers
         # head shards over this shard_map axis before the output projection
         self.tp_axis = tp_axis
+        # serving kv-sequence split: also set by ``sharded_paged_step``.
+        # Each rank holds a contiguous block-dim shard of the paged pool;
+        # attention localizes the replicated block tables, computes flash
+        # partials over owned positions only, and combines them with
+        # collectives.distributed_softmax over this shard_map axis
+        self.seq_axis = seq_axis
 
     # ------------------------------------------------------------------
     # parameters
@@ -204,6 +211,7 @@ class Model:
             prefix_kv=prefix_kv,
             backend=backend,
             tp_axis=self.tp_axis,
+            seq_axis=self.seq_axis,
         )
         x = x + h
         hin = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
@@ -352,44 +360,61 @@ class Model:
         backend = kernel_ops.resolve_attention_backend(backend)
         return jax.jit(functools.partial(getattr(self, name), backend=backend))
 
-    def paged_pool_specs(self, axis="model"):
-        """PartitionSpecs for the block-pool leaves under serving TP
-        (DESIGN.md §5): KV (and scale) leaves shard on the kv-head axis;
-        the layer/block/offset axes are physical storage walked identically
-        by every rank. Block tables and lengths are data, not pool leaves —
-        they stay replicated."""
-        kv = jax.sharding.PartitionSpec(None, None, None, axis, None)
-        sc = jax.sharding.PartitionSpec(None, None, None, axis)
-        specs = {"k": kv, "v": kv}
-        if self.cfg.kv_quant:
-            specs.update(k_scale=sc, v_scale=sc)
-        return specs
+    def paged_pool_specs(self, axis="model", seq_axis=None):
+        """PartitionSpecs for the block-pool leaves under a serving mesh
+        (DESIGN.md §5): KV (and scale) leaves shard on the kv-head axis
+        over ``axis`` (head TP) and/or on the block dim over ``seq_axis``
+        (kv-sequence split); the layer/offset axes are physical storage
+        walked identically by every rank. Block tables and lengths are
+        data, not pool leaves — they stay replicated (seq ranks localize
+        them in-body). Delegates to ``parallel.sharding.paged_pool_specs``,
+        where the seq rule lives."""
+        return sharding_mod.paged_pool_specs(
+            axis, seq_axis, quantized=bool(self.cfg.kv_quant)
+        )
 
-    def sharded_paged_step(self, name: str, mesh, backend=None, axis="model"):
-        """``jit_step`` counterpart for tensor-parallel paged serving:
+    def sharded_paged_step(
+        self, name: str, mesh, backend=None, axis="model", seq_axis="seq"
+    ):
+        """``jit_step`` counterpart for mesh-sharded paged serving:
         ``jit(shard_map(...))`` of ``decode_step_paged`` /
-        ``verify_step_paged`` with the pool's KV leaves head-partitioned
-        over mesh axis ``axis`` and everything else (params, block tables,
-        lengths, tokens, logits) replicated.
+        ``verify_step_paged`` over a 1D or 2D serving mesh. Everything
+        but the pool (params, block tables, lengths, tokens, logits)
+        stays replicated.
 
-        Each rank slices its contiguous head block out of the replicated
-        q/k/v projections (rank r owns q heads [r·H/P, (r+1)·H/P) and the
-        matching kv groups — GQA groups never straddle ranks) and runs the
-        UNSHARDED step body through a local-view model whose cfg carries
-        the per-rank head counts. With ``rules=None`` on the local model
-        the kernel backend engages per-shard exactly as on one device; the
-        head shards are gathered back before the (replicated) output
-        projection inside ``attention_block``, so every rank computes a
-        bitwise-identical residual stream and logits — see DESIGN.md §5
-        for why head partitioning needs no cross-rank softmax. Tables and
-        lengths remain data, so the single-trace / no-retrace invariants
-        of ``jit_step`` carry over unchanged."""
+        Head split (mesh axis ``axis``, PR 7 — bitwise): each rank
+        slices its contiguous head block out of the replicated q/k/v
+        projections (rank r owns q heads [r·H/P, (r+1)·H/P) and the
+        matching kv groups — GQA groups never straddle ranks) and runs
+        the UNSHARDED step body through a local-view model whose cfg
+        carries the per-rank head counts. Head shards are gathered back
+        before the (replicated) output projection inside
+        ``attention_block`` — no cross-rank float reduction, so the
+        logits are bitwise single-device.
+
+        Sequence split (mesh axis ``seq_axis`` — rounding-level): the
+        pool's block dim is partitioned so each rank owns a contiguous
+        range of physical blocks (``serve/kv_cache.py`` lays slots out
+        with one scratch block per shard). Attention localizes the
+        replicated block tables in-body (unowned entries → the rank's
+        scratch slot), computes flash running-form partials (m, l, acc)
+        over owned positions only, and combines them with
+        ``collectives.distributed_softmax`` over ``seq_axis`` — a
+        cross-rank float reduction, hence tokens match single-device to
+        rounding, not bitwise (the tolerance differential lane,
+        DESIGN.md §5). Both splits compose on a 2D ``(axis, seq_axis)``
+        mesh: per-rank partials cover (local heads × owned positions);
+        the seq combine completes each head's softmax, then the head
+        gather reassembles the full head set. Tables and lengths remain
+        data, so the single-trace / no-retrace invariants of
+        ``jit_step`` carry over unchanged."""
         backend = kernel_ops.resolve_attention_backend(backend, mesh=mesh)
         cfg = self.cfg
-        tp = mesh.shape[axis]
-        if tp == 1:
+        tp = mesh.shape.get(axis, 1) if axis else 1
+        sp = mesh.shape.get(seq_axis, 1) if seq_axis else 1
+        if tp == 1 and sp == 1:
             return self.jit_step(name, backend=backend)
-        if cfg.n_kv_heads % tp or cfg.n_heads % tp:
+        if tp > 1 and (cfg.n_kv_heads % tp or cfg.n_heads % tp):
             raise ValueError(
                 f"n_kv_heads={cfg.n_kv_heads}/n_heads={cfg.n_heads} do not "
                 f"divide mesh axis {axis!r} (size {tp}); ShardingRules "
@@ -401,7 +426,8 @@ class Model:
         h_loc, kv_loc, hd = cfg.n_heads // tp, cfg.n_kv_heads // tp, cfg.head_dim
         local = Model(
             dataclasses.replace(cfg, n_heads=h_loc, n_kv_heads=kv_loc),
-            tp_axis=axis,
+            tp_axis=axis if tp > 1 else None,
+            seq_axis=seq_axis if sp > 1 else None,
         )
         step = getattr(local, name)
 
@@ -425,9 +451,9 @@ class Model:
             )  # wo stays full: the output projection runs on gathered heads
 
         def body(params, pool, block_tables, cache_len, tokens):
-            layers = dict(
-                params["layers"], attn=slice_heads(params["layers"]["attn"])
-            )
+            layers = params["layers"]
+            if tp > 1:
+                layers = dict(layers, attn=slice_heads(layers["attn"]))
             return step(
                 dict(params, layers=layers),
                 pool,
@@ -437,7 +463,9 @@ class Model:
                 backend=backend,
             )
 
-        pool_specs = self.paged_pool_specs(axis)
+        pool_specs = self.paged_pool_specs(
+            axis if tp > 1 else None, seq_axis if sp > 1 else None
+        )
         fn = shard_map(
             body,
             mesh=mesh,
@@ -578,9 +606,16 @@ class Model:
         shares immutable full-prompt blocks), so the scatter touches
         exclusively-owned blocks only. ``block_tables`` and
         ``cache_len`` are data, not shape: one jit trace serves any
-        block layout and live set."""
+        block layout and live set.
+
+        Under the kv-sequence split (``self.seq_axis`` set on the
+        per-rank model inside ``sharded_paged_step``) the reference
+        backend also runs the layer scan: the dense differential route
+        gathers through *global* tables, which cannot address a rank's
+        local pool shard — the dict-cache path localizes them and
+        combines per-rank flash partials instead (DESIGN.md §5)."""
         backend = kernel_ops.resolve_attention_backend(backend)
-        if backend != "reference":
+        if backend != "reference" or self.seq_axis is not None:
             logits, new_pool = self._step_paged_kernel(
                 params, pool, block_tables, cache_len, tokens, backend
             )
@@ -722,9 +757,12 @@ class Model:
         T new per-token KV rows back through the tables
         (``scatter_block_tokens``). Dead rows' tables point at the null
         block, so their writes land in scratch. Tables, lengths, and
-        acceptance are data: one trace per depth."""
+        acceptance are data: one trace per depth. Like
+        ``decode_step_paged``, the kv-sequence split forces the layer
+        scan for the reference backend too (global tables cannot
+        address a rank's local pool shard)."""
         backend = kernel_ops.resolve_attention_backend(backend)
-        if backend != "reference":
+        if backend != "reference" or self.seq_axis is not None:
             if self.cfg.family not in SPEC_FAMILIES:
                 raise ValueError(
                     f"verify_step is only greedy-equivalent for {SPEC_FAMILIES}, "

@@ -102,12 +102,22 @@ def distributed_softmax(m_loc, l_loc, acc_loc, axis_name: str):
     logit that rank r saw. Returns the combined ``out [..., d]``.
 
     This is the kv-sequence-split combine (``ShardingRules`` 'kv_seq',
-    DESIGN.md §5): it is only needed when the KV *sequence* is
-    partitioned. The head-partitioned serving path never calls it —
-    softmax is per-head, so a head shard completes its softmax locally.
+    DESIGN.md §5): it runs on the serving hot path whenever the paged
+    pool is partitioned over a ``"seq"`` mesh axis. The head-partitioned
+    path never calls it — softmax is per-head, so a head shard completes
+    its softmax locally.
+
+    Empty shards: a rank whose slice holds zero valid keys carries
+    ``m_loc = -inf`` (or the ``-1e30`` mask sentinel the masked-softmax
+    paths use) with ``l_loc = 0``. ``exp(m_loc - m)`` would be
+    ``exp(-inf - -inf) = NaN`` when every rank is empty, and even a
+    single empty rank must not poison the psum — so ``scale`` is forced
+    to exactly 0 on empty shards, and the all-ranks-empty case returns
+    exact zeros (0-acc over the tiny-clamped denominator), never NaN.
     """
+    empty = m_loc <= jnp.asarray(-1e30, m_loc.dtype)  # -inf or mask sentinel
     m = lax.pmax(m_loc, axis_name)
-    scale = jnp.exp(m_loc - m)
+    scale = jnp.where(empty, 0.0, jnp.exp(m_loc - m))
     l = lax.psum(l_loc * scale, axis_name)
     acc = lax.psum(acc_loc * scale[..., None], axis_name)
     return acc / jnp.maximum(l, jnp.finfo(acc.dtype).tiny)[..., None]

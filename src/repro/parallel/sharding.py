@@ -73,6 +73,10 @@ class ShardingRules:
             # decode KV-cache sequence axis: shard over 'model' when the
             # kv-head axis cannot (flash-decode partial-softmax combine)
             "kv_seq": None if kv_ok else "model",
+            # paged-pool block dim over the serving 'seq' mesh axis
+            # (kv-sequence split; per-rank flash partials combined by
+            # collectives.distributed_softmax — DESIGN.md §5)
+            "kv_blocks": "seq",
             "tokens_ep": (batch_axes + ("model",))
             if isinstance(batch_axes, tuple)
             else (batch_axes, "model"),
@@ -168,3 +172,30 @@ class ShardingRules:
 
 def tree_shardings(mesh: Mesh, cfg: ModelConfig, params, axes_tree):
     return ShardingRules(mesh, cfg).tree_shardings(params, axes_tree)
+
+
+def paged_pool_specs(
+    axis: Optional[str] = "model",
+    seq_axis: Optional[str] = None,
+    *,
+    quantized: bool = False,
+) -> dict:
+    """PartitionSpecs for the paged KV pool leaves ``[L, NB, BS, KV, hd]``.
+
+    The serving mesh shards at most two pool dimensions: the kv-head dim
+    (3) over ``axis`` — PR 7's head-partitioned tensor parallelism,
+    bitwise-preserving — and the block dim (1) over ``seq_axis`` — the
+    kv-sequence split, where each rank holds a contiguous range of
+    physical blocks, attends over only the positions it owns, and the
+    per-rank flash partials are combined by
+    ``collectives.distributed_softmax`` (rounding-level, DESIGN.md §5).
+    Either axis may be ``None``; quantized pools carry per-(block, row)
+    scale leaves that shard the same way (minus the head_dim axis).
+    """
+    kv = P(None, seq_axis, None, axis, None)
+    specs = {"k": kv, "v": kv}
+    if quantized:
+        sc = P(None, seq_axis, None, axis)
+        specs["k_scale"] = sc
+        specs["v_scale"] = sc
+    return specs

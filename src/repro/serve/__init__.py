@@ -1,4 +1,9 @@
 from repro.serve.block import BlockAllocator, PrefixCache  # noqa: F401
+from repro.serve.differential import (  # noqa: F401
+    assert_logits_close,
+    assert_streams_equal,
+    match_streams,
+)
 from repro.serve.engine import ServingEngine  # noqa: F401
 from repro.serve.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
 from repro.serve.load import (  # noqa: F401

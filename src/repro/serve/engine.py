@@ -94,6 +94,11 @@ class ServingEngine:
         # fall back LOUDLY to replicated serving via the ShardingRules
         # drop-rule — tokens are identical either way, only the layout
         # changes, so a warning (never silence, never a crash) is right.
+        # Warned ONCE per (cfg, mesh): repeated serve(mesh=) calls on the
+        # same engine re-check but neither re-warn nor re-append the
+        # fallback record (the regression test counts warnings).
+        self._mesh_warned: set = set()
+        self.mesh_fallbacks: list[str] = []
         self.mesh = self._check_mesh(mesh)
         if self.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -128,9 +133,13 @@ class ServingEngine:
     def _check_mesh(self, mesh):
         """The engine's serving mesh, or None after the loud GQA
         fallback: head counts that don't divide the 'model' axis mean
-        ``ShardingRules`` drops the head mapping (recorded in its
-        ``fallbacks``), and the engine serves replicated — warned, never
-        silent, never wrong tokens."""
+        ``ShardingRules`` drops the head mapping, and the engine serves
+        replicated — warned, never silent, never wrong tokens. A pure
+        "seq"-axis mesh always passes: the kv-sequence split partitions
+        blocks, not heads, and the slot layout imposes no divisibility
+        constraint. The fallback record is kept (deduped) on the engine's
+        ``mesh_fallbacks`` and the warning fires once per (cfg, mesh) —
+        re-serving through the same fallen-back engine stays quiet."""
         if mesh is None or mesh.shape.get("model", 1) == 1:
             return mesh
         from repro.parallel.sharding import ShardingRules
@@ -139,16 +148,22 @@ class ServingEngine:
         rules = ShardingRules(mesh, cfg)
         tp = mesh.shape["model"]
         if rules.table["kv_heads"] is None or cfg.n_heads % tp:
-            rules.fallbacks.append(
+            record = (
                 f"kv_heads:{cfg.n_kv_heads}/heads:{cfg.n_heads} ∤ mesh "
                 f"model({tp}); serving replicated"
             )
-            log.warning(
-                "serving mesh dropped: n_kv_heads=%d/n_heads=%d do not "
-                "divide mesh axis 'model' (size %d) — serving replicated "
-                "(ShardingRules fallbacks: %s)",
-                cfg.n_kv_heads, cfg.n_heads, tp, rules.fallbacks,
-            )
+            if record not in self.mesh_fallbacks:
+                self.mesh_fallbacks.append(record)
+            rules.fallbacks.append(record)
+            key = (id(cfg), tuple(sorted(mesh.shape.items())))
+            if key not in self._mesh_warned:
+                self._mesh_warned.add(key)
+                log.warning(
+                    "serving mesh dropped: n_kv_heads=%d/n_heads=%d do not "
+                    "divide mesh axis 'model' (size %d) — serving replicated "
+                    "(ShardingRules fallbacks: %s)",
+                    cfg.n_kv_heads, cfg.n_heads, tp, rules.fallbacks,
+                )
             return None
         return mesh
 
@@ -394,15 +409,20 @@ class ServingEngine:
                     "sharded step family is built against the constructor "
                     "mesh; create one engine per mesh"
                 )
-            if self._steps or self._prefill_prefix is not None:
-                raise ValueError(
-                    "serve(mesh=) after steps were jitted without a mesh — "
-                    "pass mesh= to the ServingEngine constructor instead"
-                )
-            self.mesh = self._check_mesh(mesh)
-            if self.mesh is not None:
+            # check BEFORE the jitted-steps guard: a mesh the GQA fallback
+            # drops adopts nothing, so re-serving the same mesh through an
+            # engine that has already jitted replicated steps is fine (and
+            # warns only once — _check_mesh dedupes)
+            checked = self._check_mesh(mesh)
+            if checked is not None:
+                if self._steps or self._prefill_prefix is not None:
+                    raise ValueError(
+                        "serve(mesh=) after steps were jitted without a mesh "
+                        "— pass mesh= to the ServingEngine constructor instead"
+                    )
                 from jax.sharding import NamedSharding, PartitionSpec as P
 
+                self.mesh = checked
                 self.params = jax.device_put(
                     self.params, NamedSharding(self.mesh, P())
                 )

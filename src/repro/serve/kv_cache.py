@@ -36,6 +36,24 @@ from repro.models.model import PREFIX_FAMILIES
 from repro.serve.block import BlockAllocator, PrefixCache
 
 
+def local_table_view(tables, nb_loc: int, rank):
+    """Per-rank view of the replicated block tables under the kv-sequence
+    split (jit/shard_map-traceable; called from ``attention_block``).
+
+    ``PagedKVCache`` lays pool slots out in ``seq_shards`` contiguous
+    shards of ``nb_loc`` slots, each ending in one reserved scratch slot
+    (never the image of any allocator/null id). Rank ``r`` owns global
+    slots ``[r·nb_loc, (r+1)·nb_loc)``; its local view maps owned
+    entries to their in-shard offset and redirects every unowned entry
+    to the rank's scratch slot ``nb_loc - 1`` — a safe DMA source (its
+    positions are skipped via ``owned``) and a safe write target (the
+    owner rank writes the real data; everyone else clobbers scratch).
+    Returns ``(local_tables [B, MB], owned [B, MB] bool)``."""
+    owned = (tables // nb_loc) == rank
+    local = jnp.where(owned, tables % nb_loc, nb_loc - 1)
+    return local.astype(tables.dtype), owned
+
+
 class SlotKVCache:
     """Fixed pool of cache slots: allocate on admit, free on finish."""
 
@@ -178,22 +196,47 @@ class PagedKVCache:
         if num_blocks is None:
             num_blocks = self.max_batch * self.blocks_per_row
         self.num_blocks = int(num_blocks)
-        # one spare block past the allocator's range: unowned block-table
-        # entries point here, so dead rows' decode writes land in scratch
-        self.null_block = self.num_blocks
-        self.pool = model.init_paged_cache(
-            self.num_blocks + 1, self.block_size, dtype=dtype
-        )
-        # serving TP (DESIGN.md §5): allocate the pool head-partitioned
-        # over the mesh once — the sharded step's donation keeps every
-        # subsequent new_pool on the same NamedSharding, so KV bytes never
-        # migrate between ranks. Tables/lengths stay host-side numpy (they
-        # are data, replicated on upload by the step's in_specs).
+        # Physical slot layout. The allocator hands out ids [0, num_blocks)
+        # plus the null id num_blocks; ``_slot`` maps ids onto pool slots.
+        # Single-shard (no seq axis): identity, one spare slot past the
+        # allocator's range — unowned block-table entries point here, so
+        # dead rows' decode writes land in scratch. kv-sequence split
+        # (mesh with a "seq" axis of size sp > 1): the pool's block dim is
+        # partitioned over sp contiguous shards, and ids are laid out so
+        # every shard ends in one reserved scratch slot that is never the
+        # image of any id — per-rank table views (``local_table_view``)
+        # redirect unowned entries there, so foreign-rank writes always
+        # land in rank-local scratch (DESIGN.md §5).
         self.mesh = mesh
+        sp = int(mesh.shape.get("seq", 1)) if mesh is not None else 1
+        self.seq_shards = sp
+        ids = self.num_blocks + 1  # allocator range + the null id
+        if sp > 1:
+            d = math.ceil(ids / sp)  # data slots per shard
+            arange = np.arange(ids, dtype=np.int32)
+            self._slot = ((arange // d) * (d + 1) + arange % d).astype(np.int32)
+            self.total_blocks = sp * (d + 1)
+        else:
+            self._slot = np.arange(ids, dtype=np.int32)
+            self.total_blocks = ids
+        self.null_block = int(self._slot[self.num_blocks])
+        self.pool = model.init_paged_cache(
+            self.total_blocks, self.block_size, dtype=dtype
+        )
+        # serving mesh (DESIGN.md §5): allocate the pool sharded over the
+        # mesh once — head-partitioned on the kv-head dim ("model") and/or
+        # block-partitioned on the block dim ("seq"); the sharded step's
+        # donation keeps every subsequent new_pool on the same
+        # NamedSharding, so KV bytes never migrate between ranks.
+        # Tables/lengths stay host-side numpy (they are data, replicated
+        # on upload by the step's in_specs).
         if mesh is not None:
             from jax.sharding import NamedSharding
 
-            specs = model.paged_pool_specs()
+            tp = int(mesh.shape.get("model", 1))
+            specs = model.paged_pool_specs(
+                "model" if tp > 1 else None, "seq" if sp > 1 else None
+            )
             self.pool = {
                 name: jax.device_put(leaf, NamedSharding(mesh, specs[name]))
                 for name, leaf in self.pool.items()
@@ -310,7 +353,7 @@ class PagedKVCache:
         self._row_blocks[row] = blocks
         self._row_outstanding[row] = n_total - n_prompt
         self._outstanding_total += self._row_outstanding[row]
-        self.block_tables[row, : len(blocks)] = blocks
+        self.block_tables[row, : len(blocks)] = self._slot[blocks]
         self.cache_len[row] = S
         self._tables_version += 1
         self._len_version += 1
@@ -373,7 +416,7 @@ class PagedKVCache:
         # sliced off on the host
         h = len(hit_ids) * self.block_size
         ids = list(hit_ids) + [hit_ids[-1]] * (self.blocks_per_row - len(hit_ids))
-        table = jnp.asarray(np.array(ids, np.int32)[None, :])
+        table = jnp.asarray(self._slot[np.array(ids, np.int32)][None, :])
         k = attn.gather_block_rows(self.pool["k"], table)
         v = attn.gather_block_rows(self.pool["v"], table)
         if self.model.cfg.kv_quant:
@@ -404,7 +447,7 @@ class PagedKVCache:
         # length, any prefix-hit skip — reuses the same compiled op
         # instead of paying an eager compile per (skip, n) combination
         pad = self.blocks_per_row - len(ids)
-        idx = jnp.asarray(np.array(list(ids) + [ids[-1]] * pad, np.int32))
+        idx = jnp.asarray(self._slot[np.array(list(ids) + [ids[-1]] * pad, np.int32)])
         for name, leaf in self.pool.items():
             d = np.asarray(dense_cache[name])  # [L, 1, S_dense, ...]
             L, _, Sd = d.shape[:3]
@@ -433,7 +476,7 @@ class PagedKVCache:
             assert self._row_outstanding[row] > 0, "tail block was not reserved"
             b = self.allocator.alloc()
             self._row_blocks[row].append(b)
-            self.block_tables[row, bi] = b
+            self.block_tables[row, bi] = self._slot[b]
             self._tables_version += 1
             self._row_outstanding[row] -= 1
             self._outstanding_total -= 1
@@ -549,7 +592,9 @@ class PagedKVCache:
             if row not in live_rows:
                 assert not blocks and self._row_outstanding[row] == 0
             for j, b in enumerate(blocks):
-                assert self.block_tables[row, j] == b, "table/block-list skew"
+                assert self.block_tables[row, j] == self._slot[b], (
+                    "table/block-list skew"
+                )
                 refs[b] += 1
             assert (self.block_tables[row, len(blocks):] == self.null_block).all()
         assert refs == self.allocator.refcount, "refcounts not conserved"

@@ -120,6 +120,31 @@ def test_paper_section7_pattern():
     assert len(positives) == 7
     assert 0.18 <= gm_pos <= 0.35  # paper: 25.2%
     assert 0.10 <= gm_all <= 0.25  # paper: 17%
+    # predicted-vs-realized sign gate: the Fig.4 forced rows are accepted
+    # AND flagged regressed; winners and gate-rejects are not
+    for forced in ("1-Hop", "BVH"):
+        assert by[forced]["accepted"] and by[forced]["regressed"]
+    assert not by["Fraud"]["regressed"]
+    for r in positives:
+        assert not r["regressed"], r["name"]
+
+
+def test_flag_regressions_sign_gate():
+    """``flag_regressions`` marks exactly the accept-on-positive-
+    prediction / realized-negative rows, in place, touching nothing
+    else about the row."""
+    from benchmarks.fig34_aira import flag_regressions
+
+    rows = [
+        dict(name="win", accepted=True, predicted=0.25, realized=0.25),
+        dict(name="forced", accepted=True, predicted=0.09, realized=-0.05),
+        dict(name="rejected", accepted=False, predicted=-0.02, realized=0.0),
+        dict(name="flat", accepted=True, predicted=0.0, realized=0.0),
+    ]
+    out = flag_regressions(rows)
+    assert out is rows  # in place, chainable
+    assert [r["regressed"] for r in rows] == [False, True, False, False]
+    assert rows[1]["accepted"], "the flag must not demote the gate decision"
 
 
 def test_adviser_rejects_without_trace_for_shared_writes():

@@ -285,6 +285,95 @@ def test_kernel_inputs_hoists_invariant_device_views(served):
     np.testing.assert_array_equal(np.asarray(t5), kv.block_tables)
 
 
+_MUT = {}
+
+
+def _mutation_fixture():
+    """Module memo (the hypothesis stub's ``given`` wrapper takes no
+    pytest fixtures): one reduced model plus one batch=1 dense prefill
+    reused as the ``write_prefill`` payload."""
+    if not _MUT:
+        cfg = get_config("smollm-135m").reduced()
+        m = Model(cfg)
+        params, _ = m.init(jax.random.key(0))
+        prompt = jnp.arange(6, dtype=jnp.int32)[None]
+        _, dense = jax.jit(lambda p, t: m.prefill(p, t, 16))(params, prompt)
+        _MUT["m"], _MUT["dense"] = m, dense
+    return _MUT["m"], _MUT["dense"]
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_any_mutation_refreshes_kernel_inputs(seed):
+    """Version-counter property: after ANY public mutation — admit,
+    prefill install, lazy tail claim, decode/verify advance, rewind,
+    preempt, retire — the next ``kernel_inputs()`` device views equal
+    the host tables/lengths exactly, and an un-mutated re-read returns
+    the identical cached objects. A missed ``_tables_version`` /
+    ``_len_version`` bump anywhere in the mutation surface fails this
+    under some op sequence."""
+    m, dense = _mutation_fixture()
+    rng = random.Random(seed)
+    kv = PagedKVCache(m, max_batch=3, max_seq=16, block_size=4, num_blocks=12)
+    rid = 0
+    live: dict[int, tuple] = {}  # row -> (prompt tokens, length limit)
+
+    def check():
+        _, t, l = kv.kernel_inputs()
+        np.testing.assert_array_equal(np.asarray(t), kv.block_tables)
+        np.testing.assert_array_equal(np.asarray(l), kv.cache_len)
+        _, t2, l2 = kv.kernel_inputs()  # no mutation in between
+        assert t2 is t and l2 is l, "un-mutated re-read must hit the cache"
+
+    for _ in range(120):
+        ops = []
+        if kv.n_free:
+            ops += ["admit"]
+        if live:
+            ops += ["decode", "verify", "prefill", "free", "preempt"]
+        op = rng.choice(ops)
+        if op == "admit":
+            plen = rng.randint(1, 6)
+            toks = tuple(rng.randrange(50) for _ in range(plen))
+            budget = rng.randint(1, 6)
+            r = kv.try_admit(rid, toks, budget=budget)
+            rid += 1
+            if r is not None:
+                live[r[0]] = (toks, plen + budget)
+        elif op == "decode":
+            row = rng.choice(sorted(live))
+            if int(kv.cache_len[row]) < live[row][1]:
+                kv.ensure_tail(row)
+                check()
+                kv.advance(row)
+        elif op == "verify":
+            # verify-style burst: claim + advance n, rewind a rejected tail
+            row = rng.choice(sorted(live))
+            room = live[row][1] - int(kv.cache_len[row])
+            if room > 0:
+                n = rng.randint(1, min(3, room))
+                kv.ensure_tail_n(row, n)
+                check()
+                kv.advance_n(row, n)
+                check()
+                k = rng.randint(0, n)
+                if k:
+                    kv.truncate_row(row, k)
+        elif op == "prefill":
+            row = rng.choice(sorted(live))
+            kv.write_prefill(row, dense)
+        elif op == "free":
+            row = rng.choice(sorted(live))
+            kv.free_row(row)
+            del live[row]
+        elif op == "preempt":
+            row = rng.choice(sorted(live))
+            kv.preempt_row(row, tokens=live[row][0] if rng.random() < 0.5 else None)
+            del live[row]
+        check()
+        kv.check_invariants()
+
+
 def test_paged_cache_rejects_non_attention_family():
     cfg = get_config("mamba2-370m").reduced()
     m = Model(cfg)

@@ -120,6 +120,41 @@ print("PASS")
 """)
 
 
+def test_distributed_softmax_empty_shard():
+    """Empty-shard guard (DESIGN.md §5): a rank whose kv-sequence shard
+    holds zero valid positions reports m = -inf / l = 0 and must
+    contribute scale 0 — not NaN — to the combine; when every rank is
+    empty the combine returns exact zeros."""
+    _run(HEADER + """
+from repro.parallel.collectives import distributed_softmax
+B, H, S, d = 2, 3, 32, 8
+sh = S // 4  # per-rank shard on the 4-way "model" axis
+logits = jax.random.normal(jax.random.key(0), (B, H, S)) * 4.0
+v = jax.random.normal(jax.random.key(1), (B, H, S, d))
+# ranks 1..3 fully masked: only the first shard's positions are valid
+valid = jnp.arange(S) < sh
+want = jnp.einsum("bhs,bhsd->bhd",
+                  jax.nn.softmax(jnp.where(valid, logits, -jnp.inf), axis=-1), v)
+def local(lg, vl, keep):
+    lg = jnp.where(keep, lg, -jnp.inf)  # a fully-masked shard: m = -inf
+    m = lg.max(-1)
+    p = jnp.where(keep, jnp.exp(lg - m[..., None]), 0.0)
+    acc = jnp.einsum("bhs,bhsd->bhd", p, vl)
+    return distributed_softmax(m, p.sum(-1), acc, "model")
+fn = shard_map(local, mesh=mesh,
+               in_specs=(P(None, None, "model"), P(None, None, "model", None),
+                         P("model")),
+               out_specs=P(), check_vma=False)
+out = np.asarray(jax.jit(fn)(logits, v, valid))
+assert not np.isnan(out).any(), "empty shards must not poison the combine"
+np.testing.assert_allclose(out, np.asarray(want), atol=1e-5, rtol=1e-5)
+# every rank empty -> the 0/0 row returns exact zeros, not NaN
+out0 = np.asarray(jax.jit(fn)(logits, v, jnp.zeros(S, bool)))
+np.testing.assert_array_equal(out0, np.zeros_like(out0))
+print("PASS")
+""")
+
+
 def test_pipeline_two_stage():
     _run(HEADER.replace('(2, 4), ("data", "model")', '(2, 2, 2), ("pod", "data", "model")').replace("*2", "*3") + """
 from repro.parallel.pipeline import pipelined_apply

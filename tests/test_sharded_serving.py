@@ -1,8 +1,12 @@
-"""Sharded-serving differential lane: tensor-parallel paged decode/verify
-(DESIGN.md §5) must produce BITWISE the token streams of the single-device
-paged path — head partitioning only moves parallel work, never changes a
-reduction order. Each test runs in a subprocess with a forced 4-device CPU
-host platform so the main pytest process keeps its single real device."""
+"""Sharded-serving differential lanes (DESIGN.md §5). Head-only
+("model") meshes must produce BITWISE the token streams of the
+single-device paged path — head partitioning only moves parallel work,
+never changes a reduction order. kv-sequence-split meshes ("seq" and 2D
+("model","seq")) recombine softmaxes from per-rank flash partials, so
+their lane is tolerance-based: argmax token identity plus a
+max-abs-logit bound (``repro.serve.differential``). Each test runs in a
+subprocess with a forced 4-device CPU host platform so the main pytest
+process keeps its single real device."""
 import os
 import subprocess
 import sys
@@ -108,6 +112,138 @@ sharded = ServingEngine(m, params, max_seq=64, kv_layout="paged",
 identical(base.serve(reqs(), max_batch=4), sharded.serve(reqs(), max_batch=4))
 identical(base.serve(reqs(), max_batch=4, spec=SpecConfig(k=2)),
           sharded.serve(reqs(), max_batch=4, spec=SpecConfig(k=2)))
+print("PASS")
+""")
+
+
+def _mesh_header(shape, names) -> str:
+    """Header with an arbitrary serving mesh (e.g. ``(2, 2)`` over
+    ``("model", "seq")``) instead of the head-only one."""
+    return _header(2).replace(
+    	'jax.make_mesh((2,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))',
+    	f'jax.make_mesh({shape!r}, {names!r}, '
+    	f'axis_types=(jax.sharding.AxisType.Auto,) * {len(shape)})',
+    ).replace(
+    	'jax.make_mesh((2,), ("model",))',
+    	f'jax.make_mesh({shape!r}, {names!r})',
+    )
+
+
+@pytest.mark.parametrize(
+    "shape,names",
+    [((2,), ("model",)), ((2,), ("seq",)), ((2, 2), ("model", "seq"))],
+    ids=["model2", "seq2", "model2xseq2"],
+)
+def test_mesh_shapes_token_identity(shape, names):
+    """The serve-level differential over every mesh family the engine
+    supports: head-only (bitwise lane), kv-sequence split, and the 2D
+    composition — plain, speculative K=2, and chunked prefill all match
+    the single-device paged streams (tolerance lane's argmax token
+    identity; greedy tokens ARE the argmax)."""
+    _run(_mesh_header(shape, names) + """
+from repro.serve.differential import assert_streams_equal
+m, params = build(CFG)
+base = ServingEngine(m, params, max_seq=64, kv_layout="paged",
+                     attention_backend="interpret")
+sharded = ServingEngine(m, params, max_seq=64, kv_layout="paged",
+                        attention_backend="interpret", mesh=mesh)
+assert sharded.mesh is mesh
+sched = sharded.scheduler(4)
+spec = tuple(sched.kv.pool["k"].sharding.spec)
+for ax in mesh.axis_names:
+    if mesh.shape[ax] > 1:
+        assert ax in spec, (ax, spec)  # pool really partitioned on ax
+assert_streams_equal(base.serve(reqs(), max_batch=4),
+                     sharded.serve(reqs(), max_batch=4), label="plain")
+assert_streams_equal(
+    base.serve(reqs(), max_batch=4, spec=SpecConfig(k=2)),
+    sharded.serve(reqs(), max_batch=4, spec=SpecConfig(k=2)), label="spec")
+assert_streams_equal(
+    base.serve(reqs(plen=12), max_batch=4, chunk_size=4),
+    sharded.serve(reqs(plen=12), max_batch=4, chunk_size=4), label="chunked")
+print("PASS")
+""")
+
+
+def test_seq_split_reference_backend():
+    """The reference backend must route through the partials path under
+    the kv-sequence split (the dense differential route gathers through
+    global tables, which cannot address a local pool shard) — pinned by
+    serving through a pure-"seq" mesh with backend="reference"."""
+    _run(_mesh_header((2,), ("seq",)) + """
+from repro.serve.differential import assert_streams_equal
+m, params = build(CFG)
+base = ServingEngine(m, params, max_seq=64, kv_layout="paged",
+                     attention_backend="reference")
+sharded = ServingEngine(m, params, max_seq=64, kv_layout="paged",
+                        attention_backend="reference", mesh=mesh)
+assert_streams_equal(base.serve(reqs(), max_batch=4),
+                     sharded.serve(reqs(), max_batch=4), label="reference")
+print("PASS")
+""")
+
+
+def test_seq_split_logit_tolerance_empty_shards():
+    """Tolerance-lane logit bound with the empty-shard guard on the hot
+    path: rows short enough that one rank's kv-sequence shard holds ZERO
+    blocks still decode NaN-free, argmax-identical, and within the
+    rounding bound of the single-device step."""
+    _run(_mesh_header((2,), ("seq",)) + """
+from repro.serve.differential import assert_logits_close
+from repro.serve.kv_cache import PagedKVCache
+m, params = build(CFG)
+prompts = [(np.arange(3, dtype=np.int32) * (i + 1)) % cfg_vocab for i in range(4)]
+def one_step(use_mesh):
+    kv = PagedKVCache(m, max_batch=4, max_seq=32, block_size=8,
+                      mesh=mesh if use_mesh else None, prefix_cache=False)
+    for i, p in enumerate(prompts):
+        assert kv.try_admit(i, p, budget=8) is not None
+        _, dense = jax.jit(lambda pr: m.prefill(params, pr, 32))(jnp.asarray(p)[None])
+        kv.write_prefill(i, dense)
+    step = (m.sharded_paged_step("decode_step_paged", mesh, backend="interpret")
+            if use_mesh else m.jit_step("decode_step_paged", backend="interpret"))
+    pool, tables, lens = kv.kernel_inputs()
+    tok = jnp.asarray([[int(p[-1])] for p in prompts], jnp.int32)
+    logits, _ = step(params, pool, tables, lens, tok)
+    return np.asarray(logits)
+base, got = one_step(False), one_step(True)
+# 3-token rows own one block each; the 2-way slot layout places every
+# early block on rank 0, so rank 1 is fully empty -> guard on hot path
+assert_logits_close(base, got, atol=1e-4, label="seq2 one-step")
+print("PASS")
+""")
+
+
+def test_mesh_fallback_warns_once():
+    """GQA fallback dedupe: serving repeatedly through a mesh the head
+    partitioning cannot divide warns exactly once per (cfg, mesh), keeps
+    one deduped ``mesh_fallbacks`` record, and still serves (replicated,
+    never wrong tokens)."""
+    _run(_header(2) + """
+import logging
+cfg3 = dataclasses.replace(CFG, n_heads=6, n_kv_heads=3)  # 3 kv-heads ∤ tp=2
+m, params = build(cfg3)
+eng = ServingEngine(m, params, max_seq=64, kv_layout="paged",
+                    attention_backend="interpret")
+base = ServingEngine(m, params, max_seq=64, kv_layout="paged",
+                     attention_backend="interpret")
+
+class Count(logging.Handler):
+    n = 0
+    def emit(self, record):
+        Count.n += 1
+
+h = Count()
+logging.getLogger("repro.serve").addHandler(h)
+outs = [eng.serve(reqs(), max_batch=4, mesh=mesh) for _ in range(3)]
+logging.getLogger("repro.serve").removeHandler(h)
+assert Count.n == 1, f"fallback warned {Count.n} times, want once"
+assert len(eng.mesh_fallbacks) == 1, eng.mesh_fallbacks
+assert eng.mesh is None  # never adopted the undividable mesh
+want = base.serve(reqs(), max_batch=4)
+for got in outs:
+    for (_, va), (_, vb) in zip(sorted(want.items()), sorted(got.items())):
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
 print("PASS")
 """)
 
