@@ -127,6 +127,12 @@ def main() -> None:
     # a forced multi-device CPU subprocess when this process has one
     # real device (the normal CI case).
     serving["sharded"] = serving_load.run_sharded()
+    print()
+    # flight-recorder contract: telemetry-on serves the same workload
+    # token-identically through the same warmed engine, the paired-rep
+    # p50-step overhead stays under the pinned factor, and the exported
+    # trace validates (DESIGN.md §8)
+    serving["observability"] = serving_load.run_observability()
     write_summary(rows, gm_pos, gm_all, ubench_us, serving=serving)
 
 

@@ -67,6 +67,20 @@ re-execs itself in a subprocess with a forced multi-device CPU host
 platform, so ``benchmarks.run`` still lands ``serving.sharded`` in the
 summary.
 
+The observability mode (``run_observability`` / ``--trace [PATH]``)
+pins the flight-recorder contract (DESIGN.md §8): one warmed engine
+serves an identical paged + speculative + chunked workload with
+telemetry OFF and then ON (per-call ``telemetry=`` override, so both
+runs share every jitted executable), asserts bitwise token identity
+(recording is observation, never behaviour), asserts the instrumented
+p50 decode step stays within a pinned factor of the uninstrumented
+one, sanity-checks the ``window_summary`` adviser signal vector, runs
+the ``SpeculationAdvisorTool`` on the measured profile so the decision
+(with its priced inputs) lands in the trace as an adviser-audit event,
+and — with ``--trace`` — exports Chrome/Perfetto trace-event JSON
+(load in ui.perfetto.dev) validated by
+``repro.serve.telemetry.validate_chrome_trace``.
+
 Feeds the ``serving`` section of ``BENCH_aira.json`` (benchmarks/run.py)
 so serving latency is tracked across PRs. Request generation lives in
 ``repro.serve.load`` (shared with examples/serve_decode.py).
@@ -695,6 +709,159 @@ def run_sharded(
     return summary
 
 
+def run_observability(
+    *,
+    arch: str = "smollm-135m",
+    n_requests: int = 8,
+    rate_rps: float = 50.0,
+    max_batch: int = 3,
+    prompt_len: int = 12,
+    tokens: int = 12,
+    chunk_size: int = 8,
+    spec_k: int = 2,
+    reps: int = 3,
+    overhead_factor: float = 1.5,
+    trace_path: str | None = None,
+    seed: int = 0,
+    print_fn=print,
+) -> dict:
+    """Flight-recorder contract: tracing observes, never perturbs.
+
+    One warmed paged engine serves the same speculative + chunked
+    open-loop workload with telemetry off and on — the per-call
+    ``telemetry=`` override means both runs share every jitted
+    executable, so the measured delta is pure recording overhead. The
+    off/on serves are interleaved ``reps`` times and compared as
+    PAIRED per-rep p50 ratios (machine drift moves both sides of a
+    pair together, so the best pair isolates the recording cost from
+    shared-runner noise); the pinned ``overhead_factor`` is the BENCH
+    guard against gross regressions like an accidental per-event host
+    sync. Token identity off == on is
+    asserted bitwise. The ON run's ``window_summary`` (the online-
+    adviser signal vector) is sanity-checked, and the measured
+    speculation profile is fed to ``SpeculationAdvisorTool`` while the
+    recorder is armed so the decision — with its priced inputs — lands
+    in the exported trace as an adviser-audit event. ``trace_path``
+    exports Chrome/Perfetto JSON, validated structurally before the
+    path is reported."""
+    from repro.configs import get_config
+    from repro.core.tools import SpecMeasurement, SpeculationAdvisorTool
+    from repro.models import Model
+    from repro.serve import ServingEngine, SpecConfig
+    from repro.serve.load import make_requests
+    from repro.serve.telemetry import Telemetry, validate_chrome_trace
+
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params, _ = model.init(jax.random.key(seed))
+    engine = ServingEngine(
+        model, params, max_seq=64, kv_layout="paged", block_size=8
+    )
+    spec = SpecConfig(k=spec_k, drafter="ngram")
+    serve_kw = dict(max_batch=max_batch, seed=seed, spec=spec, chunk_size=chunk_size)
+
+    def workload():
+        return make_requests(
+            n_requests, rate_rps, vocab=cfg.vocab_size, max_new_tokens=tokens,
+            prompt_lens=(prompt_len,), rng=np.random.default_rng(seed),
+        )
+
+    tel = Telemetry(enabled=True, capacity=1 << 16)
+    off = Telemetry(enabled=False)
+    engine.serve(workload(), **serve_kw)  # warm every jitted executable
+
+    p50 = {"off": [], "on": []}
+    outputs: dict = {}
+    for _ in range(reps):
+        for mode, t in (("off", off), ("on", tel)):
+            reqs = workload()
+            out = engine.serve(reqs, telemetry=t, **serve_kw)
+            p50[mode].append(engine.stats.percentile(50))
+            outputs[mode] = [np.asarray(out[r.rid]) for r in reqs]
+    for a, b in zip(outputs["off"], outputs["on"]):
+        np.testing.assert_array_equal(
+            a, b, err_msg="telemetry changed the decoded tokens"
+        )
+
+    # the ON run left its windows on the shared stats registry
+    window = engine.stats.registry.window_summary(8)
+    assert window["admitted"] > 0, "no admissions landed in the window"
+    assert window["step_cost_ms"] > 0, "no step cost landed in the window"
+    assert 0.0 <= window["acceptance_rate"] <= 1.0
+    assert window["pool_occupancy"] >= 0.0
+
+    # adviser audit: price the measured profile with the recorder armed
+    s = engine.stats.serving_summary()["speculative"]
+    meas = SpecMeasurement(
+        draft_ms_per_token=s["p50_draft_ms"] / max(1, spec_k),
+        verify_ms={0: s["p50_verify_ms"], spec_k: s["p50_verify_ms"]},
+        acceptance_rate=s["acceptance_rate"],
+    )
+    import repro.serve.telemetry as telemetry_mod
+
+    was = telemetry_mod.GLOBAL
+    telemetry_mod.GLOBAL = tel  # tools read the module global
+    try:
+        advised_k, _gain, advisor_line = SpeculationAdvisorTool(
+            ks=(0, spec_k)
+        ).choose(meas)
+    finally:
+        telemetry_mod.GLOBAL = was
+
+    names = {e[1] for e in tel.tracer.events}
+    assert "step" in names, "no scheduler step span recorded"
+    assert "speculation-decision" in names, "advisor decision not in trace"
+    counts = validate_chrome_trace(tel.tracer.to_chrome_trace())
+    if trace_path:
+        tel.tracer.export(trace_path)
+
+    p50_off, p50_on = min(p50["off"]), min(p50["on"])
+    ratio = min(
+        (on / off) for off, on in zip(p50["off"], p50["on"]) if off
+    )
+    summary = {
+        "arch": arch,
+        "n_requests": n_requests,
+        "spec_k": spec_k,
+        "chunk_size": chunk_size,
+        "p50_step_off_ms": p50_off,
+        "p50_step_on_ms": p50_on,
+        "overhead_ratio": ratio,
+        "max_overhead_factor": overhead_factor,
+        "trace_events": len(tel.tracer.events),
+        "trace_counts": counts,
+        "advised_k": advised_k,
+        "window": window,
+    }
+    if trace_path:
+        summary["trace_path"] = trace_path
+    print_fn("# serving — flight recorder (token-identity + overhead guard)")
+    print_fn(
+        f"arch={arch} requests={n_requests} K={spec_k} chunk={chunk_size} "
+        f"pool={max_batch} reps={reps}"
+    )
+    print_fn(
+        f"step p50 off={p50_off:.3f}ms on={p50_on:.3f}ms "
+        f"overhead={ratio:.2f}x (pinned <{overhead_factor}x)"
+    )
+    print_fn(
+        f"trace: {counts['events']} events ({counts['spans']} spans, "
+        f"{counts['async_spans']} request spans, {counts['instants']} instants)"
+        + (f" → {trace_path}" if trace_path else "")
+    )
+    print_fn(
+        "window(8): "
+        f"accept={window['acceptance_rate']:.2f} queue={window['queue_depth']:.1f} "
+        f"occ={window['pool_occupancy']:.2f} step={window['step_cost_ms']:.3f}ms"
+    )
+    print_fn(f"advisor: {advisor_line}")
+    assert ratio < overhead_factor, (
+        f"telemetry overhead {ratio:.2f}x exceeds the pinned "
+        f"{overhead_factor}x budget"
+    )
+    return summary
+
+
 def _goodput(reqs, ttft_slo_ms: float, tpot_slo_ms) -> float:
     """Fraction of requests that finished AND met the latency SLO:
     TTFT (queueing included — the user-visible number) within
@@ -875,6 +1042,14 @@ if __name__ == "__main__":
     ap.add_argument("--overload", action="store_true",
                     help="with --chunked: under-provision the paged pool so "
                          "preemption fires (CI overload smoke)")
+    ap.add_argument("--trace", metavar="PATH", nargs="?", const="serving_trace.json",
+                    default=None,
+                    help="observability mode: serve one workload with the "
+                         "flight recorder off and on (token identity + "
+                         "overhead guard asserted) and export Chrome/"
+                         "Perfetto trace-event JSON to PATH (default "
+                         "serving_trace.json; load in ui.perfetto.dev or "
+                         "chrome://tracing)")
     ap.add_argument("--mesh", metavar="N[xM]", default=None,
                     help="sharded mode. N: serve one workload at every "
                          "power-of-two mesh size up to N through the "
@@ -891,6 +1066,8 @@ if __name__ == "__main__":
         run_speculative()
     elif args.backend:
         run_backend_sweep(backends=("reference", args.backend))
+    elif args.trace:
+        run_observability(trace_path=args.trace)
     elif args.chunked:
         run_slo(overload=args.overload)
     elif args.mesh:

@@ -33,6 +33,13 @@ prompt tokens of prefill are admitted per decode step, so a long
 prompt's prefill interleaves with running decodes instead of stalling
 them (DESIGN.md §3.3; token streams are unchanged by construction).
 
+``--trace PATH`` arms the serving flight recorder (DESIGN.md §8)
+before the engine is built and exports Chrome/Perfetto trace-event
+JSON to PATH when the run finishes — request lifecycle spans, per-step
+phase timings, and any adviser/backend events, loadable in
+ui.perfetto.dev or chrome://tracing. Recording is observation only:
+token streams are unchanged (the observability benchmark pins this).
+
 ``--mesh N`` serves through the tensor-parallel sharded path
 (DESIGN.md §5): the paged pool's KV leaves are head-partitioned over an
 N-way ``("model",)`` mesh and decode/verify run per-shard under
@@ -46,7 +53,7 @@ with a logged warning.
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
       [--int8-kv] [--paged] [--spec 4] [--tokens 32] [--batch 4]
       [--aira] [--open-loop 8] [--rate 20] [--backend interpret]
-      [--chunk 16] [--mesh 2]
+      [--chunk 16] [--mesh 2] [--trace serve_trace.json]
 """
 import argparse
 import dataclasses
@@ -105,7 +112,18 @@ def main():
                          "decode/verify per-shard (DESIGN.md §5; requires "
                          "--paged and --open-loop; token streams stay "
                          "bitwise single-device)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="arm the serving flight recorder and export "
+                         "Chrome/Perfetto trace-event JSON to PATH "
+                         "(DESIGN.md §8; load in ui.perfetto.dev)")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.serve.telemetry import configure
+
+        # arm the module-global recorder before the engine is built so
+        # the scheduler's cached metric handles are live for the run
+        configure(enabled=True)
 
     cfg = get_config(args.arch).reduced()
     if args.int8_kv:
@@ -196,6 +214,15 @@ def main():
                 f"({s['accepted']}/{s['proposed']} draft tokens; "
                 f"draft p50={s['p50_draft_ms']:.2f}ms verify p50={s['p50_verify_ms']:.2f}ms)"
             )
+    if args.trace:
+        from repro.serve.telemetry import get_telemetry, validate_chrome_trace
+
+        tracer = get_telemetry().tracer
+        counts = validate_chrome_trace(tracer.export(args.trace))
+        print(
+            f"trace: {counts['events']} events ({counts['spans']} spans, "
+            f"{counts['async_spans']} request spans) → {args.trace}"
+        )
 
 
 if __name__ == "__main__":

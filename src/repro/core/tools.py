@@ -23,6 +23,8 @@ same region signature does not retrace.
 """
 from __future__ import annotations
 
+import sys
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
@@ -31,6 +33,22 @@ import jax
 from repro.core import deps as deps_mod
 from repro.core.overlap_model import HwModel, Microtask, OverlapModel, gate
 from repro.core.relic import RelicSchedule, choose_schedule
+
+def _flight():
+    """``(telemetry, adviser_tid)`` when the global serving flight
+    recorder (serve/telemetry.py, DESIGN.md §8) is armed, else
+    ``(None, 0)``.  A ``sys.modules`` lookup, never an import: enabling
+    telemetry requires importing the module, so an absent module means
+    the recorder is off — and ``core/`` stays free of any ``serve``
+    dependency."""
+    mod = sys.modules.get("repro.serve.telemetry")
+    if mod is None:
+        return None, 0
+    tel = mod.get_telemetry()
+    if not tel.enabled:
+        return None, 0
+    return tel, mod.TID_ADVISER
+
 
 # stage verdicts a tool can report
 PASS = "pass"
@@ -277,6 +295,23 @@ class SpeculationAdvisorTool:
             f"base={base:.2f}ms/tok → K={best_k} "
             f"({best_cost:.2f}ms/tok, {gain:+.1%})"
         )
+        tel, tid = _flight()
+        if tel is not None:
+            # audit trail: the decision WITH its priced inputs, so an
+            # exported trace shows why this K was chosen
+            tel.count("adviser.decisions")
+            tel.tracer.instant(
+                "speculation-decision", "adviser", tid=tid,
+                args={
+                    "k": best_k,
+                    "gain": round(gain, 4),
+                    "acceptance_rate": round(m.acceptance_rate, 4),
+                    "draft_ms_per_token": round(m.draft_ms_per_token, 4),
+                    "base_ms_per_token": round(base, 4),
+                    "chosen_ms_per_token": round(best_cost, 4),
+                    "candidates": list(self.ks),
+                },
+            )
         return best_k, gain, log
 
     def run(self, region, ctx: ToolContext) -> StageResult:
@@ -353,6 +388,18 @@ class KernelAdvisorTool:
             f"{m.family}/{m.layout}/K={m.k}: {timings} → {best} "
             f"({best_ms:.2f}ms/step, {gain:+.1%})"
         )
+        tel, tid = _flight()
+        if tel is not None:
+            tel.count("adviser.decisions")
+            tel.tracer.instant(
+                "kernel-backend-decision", "adviser", tid=tid,
+                args={
+                    "backend": best,
+                    "gain": round(gain, 4),
+                    "cell": f"{m.family}/{m.layout}/K={m.k}",
+                    "step_ms": {b: round(float(ms), 4) for b, ms in sorted(t.items())},
+                },
+            )
         return best, gain, log
 
     def run(self, region, ctx: ToolContext) -> StageResult:
@@ -456,9 +503,21 @@ class ToolPipeline:
 
         log: list[str] = []
         ctx.n_items = jax.tree.leaves(region.items)[0].shape[0]
+        tel, tid = _flight()
 
         for tool in self.tools:
+            t0 = time.perf_counter() if tel is not None else 0.0
             result = tool.run(region, ctx)
+            if tel is not None and result.verdict != SKIP:
+                tr = tel.tracer
+                a = tr.to_us(t0)
+                args = {"region": region.name, "verdict": result.verdict}
+                if result.log:
+                    args["log"] = result.log
+                tr.complete(
+                    f"tool:{result.stage}", "adviser", a, tr.now_us() - a,
+                    tid=tid, args=args,
+                )
             if result.log:
                 log.append(f"{result.stage}: {result.log}")
             action = self.policy.decide(result, region, ctx)

@@ -46,6 +46,25 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _flight_note(event: str, counter: str, **args) -> None:
+    """Mirror a dispatch resolution onto the serving flight recorder
+    (DESIGN.md §8) as a counter + instant event on the backend lane.
+    Looks the telemetry module up in ``sys.modules`` rather than
+    importing it: enabling telemetry requires importing it, so a
+    never-imported module means the recorder is off — and the kernel
+    layer never pulls ``repro.serve`` in on its own."""
+    import sys
+
+    mod = sys.modules.get("repro.serve.telemetry")
+    if mod is None:
+        return
+    tel = mod.get_telemetry()
+    if not tel.enabled:
+        return
+    tel.count(counter)
+    tel.tracer.instant(event, "backend", tid=mod.TID_BACKEND, args=args or None)
+
+
 # ---------------------------------------------------------------------------
 # dispatch resolution — once per process, not per call
 
@@ -71,6 +90,10 @@ def default_kernel_mode() -> str:
         log.info(
             "kernel mode resolved once: %s (REPRO_KERNEL_MODE=%s, platform=%s)",
             _DEFAULT_MODE, raw, jax.default_backend(),
+        )
+        _flight_note(
+            "kernel-mode-resolved", "backend.resolutions",
+            resolved=_DEFAULT_MODE, source=raw,
         )
     return _DEFAULT_MODE
 
@@ -128,12 +151,21 @@ def resolve_attention_backend(
                 "platform=%s)",
                 _ATTN_BACKEND, raw, jax.default_backend(),
             )
+            _flight_note(
+                "attention-backend-resolved", "backend.resolutions",
+                resolved=_ATTN_BACKEND, source=raw,
+            )
         resolved = _ATTN_BACKEND
     if mesh is not None and resolved == "kernel" and not _on_tpu():
         log.info(
             "attention backend 'kernel' on a %s mesh → 'interpret' "
             "(Pallas runs per-shard; host devices interpret it)",
             jax.default_backend(),
+        )
+        _flight_note(
+            "attention-backend-fallback", "backend.fallbacks",
+            wanted="kernel", resolved="interpret",
+            platform=jax.default_backend(),
         )
         return "interpret"
     return resolved

@@ -20,3 +20,11 @@ from repro.serve.speculative import (  # noqa: F401
     SpecConfig,
     advise_depth,
 )
+from repro.serve.telemetry import (  # noqa: F401
+    MetricsRegistry,
+    Telemetry,
+    Tracer,
+    configure,
+    get_telemetry,
+    validate_chrome_trace,
+)

@@ -43,6 +43,7 @@ class BlockAllocator:
         num_blocks: int,
         on_evict: Optional[Callable] = None,
         is_leaf: Optional[Callable] = None,
+        metrics=None,
     ):
         if num_blocks < 1:
             raise ValueError("num_blocks must be >= 1")
@@ -59,6 +60,14 @@ class BlockAllocator:
         # destroys a whole cached prefix chain (prefix hit rates degrade
         # from the divergence tails inward, not root-first)
         self.is_leaf = is_leaf
+        # optional telemetry.MetricsRegistry (DESIGN.md §8): alloc /
+        # share / park / evict rates. Counter handles are cached here so
+        # the instrumented path is one predictable branch + inc; with
+        # metrics=None (telemetry off) nothing is recorded.
+        self._m_alloc = metrics.counter("pool.alloc") if metrics else None
+        self._m_share = metrics.counter("pool.share") if metrics else None
+        self._m_park = metrics.counter("pool.park") if metrics else None
+        self._m_evict = metrics.counter("pool.evict") if metrics else None
 
     # ------------------------------------------------------------------
     # occupancy
@@ -105,6 +114,8 @@ class BlockAllocator:
             )
         block = self._free.pop(0)
         self.refcount[block] = 1
+        if self._m_alloc is not None:
+            self._m_alloc.inc()
         return block
 
     def share(self, block: int) -> None:
@@ -117,6 +128,8 @@ class BlockAllocator:
                 raise RuntimeError(f"sharing free block {block}")
             del self._parked[block]
         self.refcount[block] += 1
+        if self._m_share is not None:
+            self._m_share.inc()
 
     def free(self, block: int, park: bool = False) -> None:
         """Drop one referent. At refcount 0 the block returns to the free
@@ -130,6 +143,8 @@ class BlockAllocator:
             if park:
                 self._tick += 1
                 self._parked[block] = self._tick
+                if self._m_park is not None:
+                    self._m_park.inc()
             else:
                 bisect.insort(self._free, block)
 
@@ -150,6 +165,8 @@ class BlockAllocator:
             if b in self._parked:  # descendants are parked by closure
                 del self._parked[b]
                 bisect.insort(self._free, b)
+                if self._m_evict is not None:
+                    self._m_evict.inc()
 
     def _check_range(self, block: int) -> None:
         if not 0 <= block < self.num_blocks:

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 from repro.kernels import ops as kernel_ops
 from repro.serve.request import Request, ServeStats  # noqa: F401 (re-export)
 from repro.serve.scheduler import Scheduler
+from repro.serve.telemetry import TID_BACKEND, get_telemetry
 
 log = logging.getLogger("repro.serve")
 
@@ -76,6 +77,7 @@ class ServingEngine:
         attention_backend: Optional[str] = None,
         chunk_size: Optional[int] = None,
         mesh=None,
+        telemetry=None,
     ):
         self.model = model
         self.params = params
@@ -88,6 +90,12 @@ class ServingEngine:
         self.prefix_cache = prefix_cache
         self.spec = spec  # default SpecConfig for serve()/scheduler()
         self.chunk_size = chunk_size  # default chunked-prefill token budget
+        # flight recorder + metrics (DESIGN.md §8): every scheduler this
+        # engine makes shares the tracer (and the stats registry the
+        # windowed metrics live in). Default is the module-global
+        # telemetry, which is disabled — the hard off-switch.
+        self.telemetry = telemetry if telemetry is not None else get_telemetry()
+        self.stats = ServeStats()
         # serving tensor parallelism (DESIGN.md §5): a mesh with a 'model'
         # axis head-partitions the paged pool and runs the decode/verify
         # steps under shard_map. Head counts that do not divide the axis
@@ -126,7 +134,6 @@ class ServingEngine:
         self._steps: dict[str, dict] = {}  # backend → jitted decode/verify family
         self._plan_steps: dict = {}  # (plan key, pool size) → jitted plan step
         self._decode_plan = None
-        self.stats = ServeStats()
         if decode_plan is not None:
             self.set_decode_plan(decode_plan)
 
@@ -154,6 +161,14 @@ class ServingEngine:
             )
             if record not in self.mesh_fallbacks:
                 self.mesh_fallbacks.append(record)
+                if self.telemetry.enabled:
+                    self.telemetry.count(
+                        "serve.mesh_fallbacks", registry=self.stats.registry
+                    )
+                    self.telemetry.tracer.instant(
+                        "mesh-fallback", "backend", tid=TID_BACKEND,
+                        args={"record": record},
+                    )
             rules.fallbacks.append(record)
             key = (id(cfg), tuple(sorted(mesh.shape.items())))
             if key not in self._mesh_warned:
@@ -309,6 +324,7 @@ class ServingEngine:
         spec=None,
         attention_backend: Optional[str] = None,
         chunk_size: Optional[int] = None,
+        telemetry=None,
     ) -> Scheduler:
         """A fresh continuous-batching scheduler over ``max_batch`` rows
         (slots, or paged block tables), sharing this engine's stats,
@@ -317,7 +333,10 @@ class ServingEngine:
         ``attention_backend`` overrides the engine default — each
         backend's jitted step family is cached separately, so switching
         is retrace-free after first use. ``chunk_size`` overrides the
-        engine's chunked-prefill budget (``0`` disables for this call)."""
+        engine's chunked-prefill budget (``0`` disables for this call).
+        ``telemetry`` overrides the engine's flight recorder for this
+        scheduler (the instrumented-vs-off overhead benchmark serves the
+        same warmed engine both ways)."""
         layout = kv_layout or self.kv_layout
         if self.mesh is not None and layout != "paged":
             raise ValueError(
@@ -375,6 +394,7 @@ class ServingEngine:
             prefill_fn=self._prefill,
             decode_fn=self._step_fns(backend)["decode"],
             plan_step_cache=self._plan_steps,
+            telemetry=telemetry if telemetry is not None else self.telemetry,
             **paged_kw,
         )
 
@@ -389,6 +409,7 @@ class ServingEngine:
         attention_backend: Optional[str] = None,
         chunk_size: Optional[int] = None,
         mesh=None,
+        telemetry=None,
     ) -> dict:
         """Continuous-batching entry: drive ``requests`` (each with its
         own arrival time, prompt length, and token budget) to completion
@@ -434,6 +455,7 @@ class ServingEngine:
         return self.scheduler(
             mb, seed=seed, kv_layout=kv_layout, spec=spec,
             attention_backend=attention_backend, chunk_size=chunk_size,
+            telemetry=telemetry,
         ).run(requests)
 
     def _sample(self, logits, key):

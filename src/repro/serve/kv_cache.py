@@ -77,6 +77,12 @@ class SlotKVCache:
     def n_live(self) -> int:
         return self.max_batch - len(self._free)
 
+    @property
+    def occupancy(self) -> float:
+        """Pool-pressure gauge in [0, 1]: fraction of slots live (the
+        slotted layout's only capacity axis)."""
+        return self.n_live / self.max_batch
+
     def owner(self, slot: int) -> Optional[int]:
         return self._owner[slot]
 
@@ -181,6 +187,7 @@ class PagedKVCache:
         prefix_cache: bool = True,
         dtype=None,
         mesh=None,
+        metrics=None,
     ):
         self.model = model
         self.max_batch = int(max_batch)
@@ -252,10 +259,17 @@ class PagedKVCache:
             if prefix_cache and cfg.family in PREFIX_FAMILIES
             else None
         )
+        # optional telemetry.MetricsRegistry (DESIGN.md §8): the
+        # allocator records alloc/share/park/evict rates; this layer
+        # adds trie lookup/hit counters. None (telemetry off) keeps the
+        # uninstrumented path.
+        self._m_lookups = metrics.counter("prefix.lookups") if metrics else None
+        self._m_hit_blocks = metrics.counter("prefix.hit_blocks") if metrics else None
         self.allocator = BlockAllocator(
             self.num_blocks,
             on_evict=self.prefix.drop_block if self.prefix is not None else None,
             is_leaf=self.prefix.is_leaf if self.prefix is not None else None,
+            metrics=metrics,
         )
         self.block_tables = np.full(
             (self.max_batch, self.blocks_per_row), self.null_block, np.int32
@@ -292,6 +306,13 @@ class PagedKVCache:
         LRU-evictable cached, minus live rows' outstanding reservations."""
         return self.allocator.n_available - self._outstanding_total
 
+    @property
+    def occupancy(self) -> float:
+        """Pool-pressure gauge in [0, 1]: fraction of physical blocks
+        holding data (live + parked; outstanding reservations excluded
+        — they are a promise, not bytes)."""
+        return 1.0 - self.allocator.n_free / self.num_blocks
+
     def owner(self, row: int) -> Optional[int]:
         return self._row_owner[row]
 
@@ -311,7 +332,11 @@ class PagedKVCache:
         block prefix of ``tokens`` (empty when prefix reuse is off)."""
         if self.prefix is None:
             return []
-        return self.prefix.match(tokens)
+        hits = self.prefix.match(tokens)
+        if self._m_lookups is not None:
+            self._m_lookups.inc()
+            self._m_hit_blocks.inc(len(hits))
+        return hits
 
     def try_admit(
         self,

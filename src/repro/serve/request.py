@@ -24,6 +24,8 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.serve.telemetry import MetricsRegistry, quantile
+
 QUEUED = "queued"
 PREFILL = "prefill"
 DECODE = "decode"
@@ -103,56 +105,64 @@ class Request:
         return (self.t_finish - self.t_first) / (len(self.tokens) - 1) * 1e3
 
 
-@dataclass
 class ServeStats:
     """Per-run latency aggregates: decode-step wall-clock plus the
-    per-request TTFT/TPOT/e2e series recorded as requests retire."""
+    per-request TTFT/TPOT/e2e series recorded as requests retire.
 
-    step_ms: list = field(default_factory=list)
-    ttft_ms: list = field(default_factory=list)
-    tpot_ms: list = field(default_factory=list)
-    e2e_ms: list = field(default_factory=list)
-    # queue-wait / service split of TTFT (queue_wait + service = ttft)
-    queue_wait_ms: list = field(default_factory=list)
-    service_ttft_ms: list = field(default_factory=list)
-    # prefix-cache accounting (paged layout; zero on the slotted path)
-    prompt_tokens: int = 0
-    prefix_hit_tokens: int = 0
-    n_prefix_hits: int = 0
-    # preemption accounting (priority scheduling under block pressure)
-    n_preemptions: int = 0
-    recomputed_tokens: int = 0  # prompt+generated tokens re-prefilled on resume
-    rejected_submissions: int = 0  # submit() refused (over-capacity request)
-    # speculative-decode accounting (zero when speculation is off):
-    # per-step latency split (draft stream vs target verify) plus the
-    # proposed/accepted draft-token counters behind the acceptance rate
-    draft_ms: list = field(default_factory=list)
-    verify_ms: list = field(default_factory=list)
-    spec_k: int = 0
-    spec_steps: int = 0
-    spec_proposed: int = 0
-    spec_accepted: int = 0
+    Backed by a ``telemetry.MetricsRegistry`` (DESIGN.md §8): every
+    latency series is a registry ``Series`` (a real list — append call
+    sites are unchanged) and every scalar counter is a registry
+    ``Counter`` exposed through int properties, so the same numbers
+    that feed ``serving_summary()`` are also visible to
+    ``registry.window_summary(n)`` as windowed signals (per-window
+    acceptance rate, prefix hit rate, preemption rate, …) without a
+    second bookkeeping path.  The ``serving_summary()`` schema is
+    unchanged by the refactor (pinned by tests/test_telemetry.py)."""
+
+    # attribute → registry metric. Series are unbounded sample lists;
+    # counters are cumulative scalars snapshotted per scheduler tick.
+    _SERIES = {
+        "step_ms": "serve.step_ms",
+        "ttft_ms": "serve.ttft_ms",
+        "tpot_ms": "serve.tpot_ms",
+        "e2e_ms": "serve.e2e_ms",
+        # queue-wait / service split of TTFT (queue_wait + service = ttft)
+        "queue_wait_ms": "serve.queue_wait_ms",
+        "service_ttft_ms": "serve.service_ttft_ms",
+        # speculative-decode per-step latency split (draft vs verify)
+        "draft_ms": "serve.draft_ms",
+        "verify_ms": "serve.verify_ms",
+    }
+    _COUNTERS = {
+        # prefix-cache accounting (paged layout; zero on the slotted path)
+        "prompt_tokens": "serve.prompt_tokens",
+        "prefix_hit_tokens": "serve.prefix_hit_tokens",
+        "n_prefix_hits": "serve.n_prefix_hits",
+        # preemption accounting (priority scheduling under block pressure)
+        "n_preemptions": "serve.preemptions",
+        "recomputed_tokens": "serve.recomputed_tokens",
+        "rejected_submissions": "serve.rejected_submissions",
+        # speculative-decode proposed/accepted behind the acceptance rate
+        "spec_k": "serve.spec_k",
+        "spec_steps": "serve.spec_steps",
+        "spec_proposed": "serve.spec_proposed",
+        "spec_accepted": "serve.spec_accepted",
+    }
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        for attr, metric in self._SERIES.items():
+            setattr(self, attr, self.registry.series(metric))
+        self._counters = {
+            attr: self.registry.counter(metric)
+            for attr, metric in self._COUNTERS.items()
+        }
 
     def reset(self) -> None:
-        """Start a run from clean series — percentiles never mix runs."""
-        self.step_ms.clear()
-        self.ttft_ms.clear()
-        self.tpot_ms.clear()
-        self.e2e_ms.clear()
-        self.queue_wait_ms.clear()
-        self.service_ttft_ms.clear()
-        self.prompt_tokens = 0
-        self.prefix_hit_tokens = 0
-        self.n_prefix_hits = 0
-        self.n_preemptions = 0
-        self.recomputed_tokens = 0
-        self.rejected_submissions = 0
-        self.draft_ms.clear()
-        self.verify_ms.clear()
-        self.spec_k = 0
-        self.spec_steps = 0
-        self.spec_proposed = 0
-        self.spec_accepted = 0
+        """Start a run from clean series — percentiles never mix runs.
+        Resets the whole registry in place (series/counters/gauges and
+        tick rings), so cached metric handles stay valid."""
+        self.registry.reset()
 
     def record(self, req: Request) -> None:
         """Fold a finished request's latencies into the run series."""
@@ -181,8 +191,12 @@ class ServeStats:
         return self.spec_accepted / self.spec_proposed if self.spec_proposed else 0.0
 
     def percentile(self, p, series: str = "step_ms") -> float:
+        """Linear-interpolated percentile over a latency series —
+        matches ``numpy.percentile``'s default method (unit-tested in
+        tests/test_telemetry.py), so p99 over a short series
+        interpolates between ranks instead of collapsing to the max."""
         vals = getattr(self, series)
-        return float(np.percentile(np.asarray(vals), p)) if vals else 0.0
+        return quantile(vals, p) if vals else 0.0
 
     def summary(self) -> str:
         s = (
@@ -253,3 +267,20 @@ class ServeStats:
                 "p50_verify_ms": self.percentile(50, "verify_ms"),
             }
         return out
+
+
+def _counter_property(attr: str) -> property:
+    # int get / set pair over the backing registry Counter, so existing
+    # `stats.prompt_tokens += n` call sites work unchanged
+    def fget(self):
+        return int(self._counters[attr].value)
+
+    def fset(self, v):
+        self._counters[attr].set(float(v))
+
+    return property(fget, fset)
+
+
+for _attr in ServeStats._COUNTERS:
+    setattr(ServeStats, _attr, _counter_property(_attr))
+del _attr

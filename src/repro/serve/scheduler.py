@@ -80,6 +80,7 @@ from repro.serve.request import (
     Request,
     ServeStats,
 )
+from repro.serve.telemetry import get_telemetry
 
 
 @dataclass
@@ -124,12 +125,30 @@ class Scheduler:
         chunk_prefill_fn=None,
         plan_step_cache: Optional[dict] = None,
         mesh=None,
+        telemetry=None,
     ):
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.temperature = float(temperature)
         self.seed = seed
+        # flight recorder (DESIGN.md §8): engine-provided, explicit, or
+        # the module-global default (disabled). `_ton` is the hard
+        # off-switch — every instrumentation site below guards on it,
+        # so a disabled tracer leaves the hot path as it was.
+        self.tel = telemetry if telemetry is not None else get_telemetry()
+        self._ton = bool(self.tel.enabled)
+        self.stats = stats if stats is not None else ServeStats()
+        if self._ton:
+            reg = self.stats.registry
+            self._g_queue = reg.gauge("sched.queue_depth")
+            self._g_active = reg.gauge("sched.active")
+            self._g_occ = reg.gauge("pool.occupancy")
+            self._g_free_blocks = reg.gauge("pool.free_blocks")
+            self._c_admitted = reg.counter("sched.admitted")
+            self._c_retraces = reg.counter("engine.retraces")
+            self._s_chunk_util = reg.series("sched.chunk_util")
+        self._step_seq = 0
         if kv_layout not in ("slot", "paged"):
             raise ValueError(f"kv_layout must be 'slot' or 'paged', got {kv_layout!r}")
         self.kv_layout = kv_layout
@@ -147,6 +166,7 @@ class Scheduler:
                 num_blocks=num_blocks,
                 prefix_cache=prefix_cache,
                 mesh=mesh,
+                metrics=self.stats.registry if self._ton else None,
             )
         else:
             self.kv = SlotKVCache(model, max_batch, max_seq)
@@ -172,7 +192,6 @@ class Scheduler:
                     f"(length-addressed KV cache), got {model.cfg.family!r}"
                 )
         self.chunk_size = chunk_size
-        self.stats = stats if stats is not None else ServeStats()
         self._queue: list[Request] = []  # sorted by (-priority, arrival_time, rid)
         self._active: dict[int, Request] = {}  # row → request
         self._chunking: dict[int, _ChunkState] = {}  # row → in-flight chunked prefill
@@ -235,6 +254,26 @@ class Scheduler:
         self._t0: Optional[float] = None
         if decode_plan is not None:
             self.set_decode_plan(decode_plan)
+        if self._ton:
+            # retrace watch: jitted-step compile-cache sizes, sampled at
+            # step boundaries — growth mid-run means a shape escaped its
+            # trace family (the no-retrace contract the chunked tests pin)
+            self._traced_fns = [
+                f
+                for f in (
+                    self._prefill,
+                    self._decode,
+                    self._decode_paged,
+                    self._prefill_prefix,
+                    self._prefill_chunk,
+                    self._verify,
+                    self._verify_paged,
+                )
+                if f is not None and hasattr(f, "_cache_size")
+            ]
+            # baseline now: engine-shared fns arrive pre-warmed, and those
+            # compiles are not this run's retraces
+            self._cache_size_seen = sum(f._cache_size() for f in self._traced_fns)
 
     # ------------------------------------------------------------------
     # plan routing (PR 1 contract, now over the active-slot view)
@@ -343,6 +382,17 @@ class Scheduler:
         req.state = "queued"
         self._queue.append(req)
         self._queue.sort(key=self._queue_key)
+        if self._ton:
+            self.tel.tracer.async_begin(
+                "request",
+                req.rid,
+                "request",
+                args={
+                    "prompt_len": int(np.asarray(req.prompt).shape[0]),
+                    "max_new_tokens": req.max_new_tokens,
+                    "priority": req.priority,
+                },
+            )
 
     def _sample_row(self, logits_row, key):
         if self.temperature <= 0.0:
@@ -358,6 +408,8 @@ class Scheduler:
         key, sub = jax.random.split(key)
         tok0 = int(self._sample_row(logits_row, sub))
         req.t_first = self._clock()  # first token exists from here
+        if self._ton:
+            self.tel.tracer.async_instant("first_token", req.rid, "request")
         req.tokens.append(tok0)
         req.state = DECODE
         self._tok = self._tok.at[row].set(tok0)
@@ -373,6 +425,11 @@ class Scheduler:
         continues its saved key chain instead."""
         if req.t_first_admit is None:
             req.t_first_admit = now
+        if self._ton:
+            self._c_admitted.inc()
+            self.tel.tracer.async_instant(
+                "resume" if req.tokens else "admit", req.rid, "request"
+            )
         if not req.tokens:
             # key by the per-run admission ordinal, not the process-global
             # rid: the same seed reproduces the same tokens across runs
@@ -442,7 +499,8 @@ class Scheduler:
                 )
             else:
                 prompts = jnp.stack([jnp.asarray(eff) for _, eff in group])
-            logits, cache = self._prefill(self.params, prompts, **kw)
+            with self.tel.annotate("serve.prefill"):
+                logits, cache = self._prefill(self.params, prompts, **kw)
             for i, (req, eff) in enumerate(group):
                 slot = self.kv.alloc(req.rid)
                 req.slot = slot
@@ -547,9 +605,10 @@ class Scheduler:
                 padded[0, :Ssuf] = np.asarray(suffix)
                 suffix = jnp.asarray(padded)[0]
                 kw["suffix_len"] = jnp.asarray([Ssuf], jnp.int32)
-            logits, cache = self._prefill_prefix(
-                self.params, suffix[None, :], pk, pv, **kw
-            )
+            with self.tel.annotate("serve.prefill"):
+                logits, cache = self._prefill_prefix(
+                    self.params, suffix[None, :], pk, pv, **kw
+                )
         else:
             kw = {}
             if req.patch_embeds is not None:
@@ -566,7 +625,8 @@ class Scheduler:
                 padded[0, :S] = np.asarray(prompt_dev)
                 prompt_dev = jnp.asarray(padded)[0]
                 kw["prompt_len"] = jnp.asarray([S], jnp.int32)
-            logits, cache = self._prefill(self.params, prompt_dev[None, :], **kw)
+            with self.tel.annotate("serve.prefill"):
+                logits, cache = self._prefill(self.params, prompt_dev[None, :], **kw)
         self.kv.write_prefill(row, cache, skip_blocks=len(hit_ids))
         if resume:
             self._resume_decode(req, row, now)
@@ -613,12 +673,28 @@ class Scheduler:
         req.slot = None
         req.preemptions += 1
         self.stats.n_preemptions += 1
+        if self._ton:
+            self.tel.tracer.async_instant(
+                "preempt", req.rid, "request",
+                args={"committed_tokens": len(req.tokens)},
+            )
         self._queue.append(req)
         self._queue.sort(key=self._queue_key)
 
     def _retire(self, req: Request, now: float) -> None:
         req.state, req.t_finish = FINISHED, now
         self.stats.record(req)
+        if self._ton:
+            self.tel.tracer.async_end(
+                "request",
+                req.rid,
+                "request",
+                args={
+                    "tokens": len(req.tokens),
+                    "preemptions": req.preemptions,
+                    "prefix_hit": req.prefix_hit,
+                },
+            )
         if self.kv_layout == "paged":
             self.kv.free_row(req.slot)
         else:
@@ -633,20 +709,22 @@ class Scheduler:
             for row in self._active:
                 self.kv.ensure_tail(row)
             pool, tables, lens = self.kv.kernel_inputs()
-            logits, new_pool = self._decode_paged(
-                self.params, pool, tables, lens, self._tok[:, None]
-            )
+            with self.tel.annotate("serve.decode"):
+                logits, new_pool = self._decode_paged(
+                    self.params, pool, tables, lens, self._tok[:, None]
+                )
             logits.block_until_ready()
             self.kv.pool = new_pool
             return logits
-        if self._decode_plan is not None:
-            logits, new_cache = self._plan_decode(
-                self.kv.cache, self._tok, jnp.asarray(mask)
-            )
-        else:
-            logits, new_cache = self._decode(
-                self.params, self.kv.cache, self._tok[:, None]
-            )
+        with self.tel.annotate("serve.decode"):
+            if self._decode_plan is not None:
+                logits, new_cache = self._plan_decode(
+                    self.kv.cache, self._tok, jnp.asarray(mask)
+                )
+            else:
+                logits, new_cache = self._decode(
+                    self.params, self.kv.cache, self._tok[:, None]
+                )
         logits.block_until_ready()
         self.kv.cache = new_cache
         return logits
@@ -666,7 +744,8 @@ class Scheduler:
         """
         K = self.spec.k
         t_start = time.perf_counter()
-        drafts = self._drafter.propose(self._active, np.asarray(self._tok))
+        with self.tel.annotate("serve.draft"):
+            drafts = self._drafter.propose(self._active, np.asarray(self._tok))
         t_draft = time.perf_counter()
         self.stats.draft_ms.append((t_draft - t_start) * 1e3)
         tokens_in = jnp.concatenate(
@@ -676,18 +755,25 @@ class Scheduler:
             for row in self._active:
                 self.kv.ensure_tail_n(row, K + 1)
             pool, tables, lens = self.kv.kernel_inputs()
-            logits, new_pool = self._verify_paged(
-                self.params, pool, tables, lens, tokens_in
-            )
+            with self.tel.annotate("serve.verify"):
+                logits, new_pool = self._verify_paged(
+                    self.params, pool, tables, lens, tokens_in
+                )
             logits.block_until_ready()
             self.kv.pool = new_pool
         else:
-            logits, new_cache = self._verify(self.params, self.kv.cache, tokens_in)
+            with self.tel.annotate("serve.verify"):
+                logits, new_cache = self._verify(self.params, self.kv.cache, tokens_in)
             logits.block_until_ready()
             self.kv.cache = new_cache
         greedy = np.asarray(jnp.argmax(logits, axis=-1))  # [max_batch, K+1]
         now = time.perf_counter()
         self.stats.verify_ms.append((now - t_draft) * 1e3)
+        if self._ton:
+            tr = self.tel.tracer
+            a, b = tr.to_us(t_start), tr.to_us(t_draft)
+            tr.complete("draft", "sched", a, b - a, args={"k": K})
+            tr.complete("verify", "sched", b, tr.to_us(now) - b, args={"k": K})
         self.stats.spec_k = K
         self.stats.spec_steps += 1
 
@@ -778,15 +864,26 @@ class Scheduler:
             n = min(n, W)
             toks = np.zeros((1, W), np.int32)
             toks[0, :n] = st.prompt[st.pos : st.pos + n]
-            logits, st.cache = self._prefill_chunk(
-                self.params, st.cache, jnp.asarray(toks),
-                jnp.asarray([n], jnp.int32),
-            )
+            with self.tel.annotate("serve.prefill_chunk"):
+                logits, st.cache = self._prefill_chunk(
+                    self.params, st.cache, jnp.asarray(toks),
+                    jnp.asarray([n], jnp.int32),
+                )
             st.pos += n
             budget -= n
+            if self._ton:
+                self.tel.tracer.async_instant(
+                    "prefill-chunk", st.req.rid, "request",
+                    args={"n": n, "pos": st.pos, "of": len(st.prompt)},
+                )
             if st.pos == len(st.prompt):
                 del self._chunking[row]
                 self._install_chunked(st, row, logits[0, n - 1], now)
+        if self._ton:
+            # fraction of the per-step token budget actually spent —
+            # sustained < 1 with a non-empty queue means admission, not
+            # chunk work, is the bottleneck
+            self._s_chunk_util.append((self.chunk_size - budget) / self.chunk_size)
         return True
 
     def _install_chunked(self, st: _ChunkState, row: int, logits_row, now) -> None:
@@ -828,6 +925,41 @@ class Scheduler:
             jax.block_until_ready(logits)
             W *= 2
 
+    def _finish_step(self, t0: float, phases) -> None:
+        """Telemetry step boundary (only reached with the tracer on):
+        emit the step span + its non-empty phase children, refresh the
+        pool/queue gauges, sample the jit caches for retraces, and tick
+        the registry so every counter lands in its window ring. All
+        host-side bookkeeping — no device syncs beyond the ones the
+        step already performed."""
+        end = time.perf_counter()
+        tr = self.tel.tracer
+        ts0 = tr.to_us(t0)
+        self._step_seq += 1
+        tr.complete(
+            "step", "sched", ts0, tr.to_us(end) - ts0,
+            args={
+                "seq": self._step_seq,
+                "active": len(self._active),
+                "queued": len(self._queue),
+            },
+        )
+        for name, a, b, did in phases:
+            if did:
+                ta = tr.to_us(a)
+                tr.complete(name, "sched", ta, tr.to_us(b) - ta)
+        self._g_queue.set(len(self._queue))
+        self._g_active.set(len(self._active))
+        self._g_occ.set(self.kv.occupancy)
+        if self.kv_layout == "paged":
+            self._g_free_blocks.set(self.kv.n_free_blocks)
+        size = sum(f._cache_size() for f in self._traced_fns)
+        if size > self._cache_size_seen:
+            self._c_retraces.inc(size - self._cache_size_seen)
+            tr.instant("retrace", "sched", args={"new": size - self._cache_size_seen})
+        self._cache_size_seen = size
+        self.stats.registry.tick()
+
     def step(self, now: Optional[float] = None) -> bool:
         """Admit arrived requests, spend the chunked-prefill token
         budget, then run one batched decode over the live set. Returns
@@ -836,20 +968,37 @@ class Scheduler:
         if now is None:
             now = self._clock()
         t0 = time.perf_counter()
+        ton = self._ton
         admitted = self._admit_phase(now)
+        t_admit = time.perf_counter() if ton else 0.0
         chunked = self._prefill_phase(now)
+        t_chunk = time.perf_counter() if ton else 0.0
         if not self._active:
             if admitted or chunked:
                 self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
+                if ton:
+                    self._finish_step(
+                        t0,
+                        (("admit", t0, t_admit, admitted),
+                         ("prefill_chunk", t_admit, t_chunk, chunked)),
+                    )
                 return True
             return False
         if self.spec is not None:
             self._spec_step()
             self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
+            if ton:
+                # draft/verify phase spans were emitted inside _spec_step
+                self._finish_step(
+                    t0,
+                    (("admit", t0, t_admit, admitted),
+                     ("prefill_chunk", t_admit, t_chunk, chunked)),
+                )
             return True
 
         mask = self.kv.live_mask()
         logits = self._decode_pool(mask)
+        t_decode = time.perf_counter() if ton else 0.0
         self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
         if self.kv_layout == "paged":
             for row in self._active:
@@ -866,6 +1015,14 @@ class Scheduler:
             req.tokens.append(tok)
             if len(req.tokens) >= req.max_new_tokens or tok == req.eos_id:
                 self._retire(req, self._clock())
+        if ton:
+            self._finish_step(
+                t0,
+                (("admit", t0, t_admit, admitted),
+                 ("prefill_chunk", t_admit, t_chunk, chunked),
+                 ("decode", t_chunk, t_decode, True),
+                 ("sample", t_decode, time.perf_counter(), True)),
+            )
         return True
 
     def run(self, requests=None, *, reset_stats: bool = True) -> dict:

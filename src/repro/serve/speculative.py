@@ -212,16 +212,19 @@ class ModelDraftSource:
         self.cache = self.model.write_cache_slot(self.cache, cache1, row)
 
     def propose(self, active: dict, tok: np.ndarray) -> np.ndarray:
+        from repro.serve.telemetry import get_telemetry
+
         cur = jnp.asarray(np.asarray(tok, np.int32))
         cache = self.cache
         out = []
-        for _ in range(self.k):
-            logits, cache = self._decode(self.params, cache, cur[:, None])
-            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(cur)
-        # catch-up: process the K-th draft so a fully-accepted round
-        # leaves the draft cache one-for-one with the target's
-        _, cache = self._decode(self.params, cache, cur[:, None])
+        with get_telemetry().annotate("serve.draft_model"):
+            for _ in range(self.k):
+                logits, cache = self._decode(self.params, cache, cur[:, None])
+                cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                out.append(cur)
+            # catch-up: process the K-th draft so a fully-accepted round
+            # leaves the draft cache one-for-one with the target's
+            _, cache = self._decode(self.params, cache, cur[:, None])
         self.cache = cache
         return np.stack([np.asarray(t) for t in out], axis=1).astype(np.int32)
 

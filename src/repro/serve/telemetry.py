@@ -1,0 +1,558 @@
+"""Serving flight recorder: structured tracing + windowed metrics.
+
+The paper's premise is that parallelization decisions must be driven by
+*measured* signals (Aira profiles, collects dynamic dependencies, and
+simulates before touching code).  This module is the serving-side
+measurement substrate (DESIGN.md §8):
+
+``Tracer``
+    A bounded ring-buffer flight recorder of trace events with
+    monotonic (``time.perf_counter``) microsecond timestamps.  Events
+    are appended as plain tuples into a ``deque(maxlen=capacity)`` —
+    recording never allocates device work, never syncs, and the oldest
+    events fall off the back under sustained load.  ``export()`` writes
+    Chrome/Perfetto trace-event JSON (load in ``ui.perfetto.dev`` or
+    ``chrome://tracing``):
+
+    * per-step **phase** events (admit / prefill-chunk / draft / verify
+      / decode / sample) as complete ``"X"`` spans on the scheduler
+      lane, nested under one span per scheduler step;
+    * per-request **lifecycle** spans as async ``"b"``/``"n"``/``"e"``
+      events keyed by request id (queued → admit → prefill-chunk* →
+      first-token → preempt/resume → finish);
+    * **adviser audit** events: ToolPipeline stages and advisor
+      decisions (speculation K, attention backend) with their priced
+      inputs, so an exported trace shows *why* each decision was made;
+    * backend resolutions / mesh fallbacks as instant events.
+
+``MetricsRegistry``
+    Counters, gauges, and (unbounded) sample series shared with
+    ``ServeStats``.  The scheduler calls ``tick()`` once per step when
+    telemetry is enabled; each tick snapshots every counter/gauge into
+    a bounded per-metric ring so ``window_summary(n)`` can answer "over
+    the last *n* steps" — acceptance rate, queue depth, pool occupancy,
+    step cost — exactly the signal vector the future online adviser
+    (ROADMAP "online adaptive adviser") will consume.  ``snapshot()``
+    returns a JSON-ready dict and ``prometheus_text()`` a
+    Prometheus-style text exposition.
+
+``Telemetry``
+    Bundles a tracer (+ optional ``jax.profiler`` annotations) behind
+    one ``enabled`` flag — the hard off-switch.  Disabled (the
+    default), every instrumentation site in the serving hot path is a
+    single attribute check and the code path is today's: no events, no
+    ticks, no annotations.  A module-global default (``get_telemetry``)
+    serves call sites with no engine handle (kernel backend registry,
+    adviser tools); engines and schedulers accept an explicit
+    ``telemetry=`` for isolation in tests.
+
+This module is stdlib + numpy only (``jax.profiler`` imported lazily
+inside ``annotate``) so ``core/`` and ``kernels/`` can use it without
+an import cycle through the serving package.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from contextlib import nullcontext
+from typing import Any, Iterable
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Series",
+    "MetricsRegistry",
+    "Tracer",
+    "Telemetry",
+    "get_telemetry",
+    "configure",
+    "quantile",
+    "validate_chrome_trace",
+    "TID_STEP",
+    "TID_REQUEST",
+    "TID_ADVISER",
+    "TID_BACKEND",
+]
+
+# One synthetic process, one thread lane per subsystem — fixed ids so
+# Perfetto groups tracks deterministically across exports.
+TRACE_PID = 1
+TID_STEP = 0  # scheduler step + phase spans
+TID_REQUEST = 1  # request lifecycle (async spans keyed by rid)
+TID_ADVISER = 2  # ToolPipeline stages + advisor decisions
+TID_BACKEND = 3  # kernel backend resolutions / mesh fallbacks
+
+_THREAD_NAMES = {
+    TID_STEP: "scheduler.step",
+    TID_REQUEST: "requests",
+    TID_ADVISER: "adviser",
+    TID_BACKEND: "backend",
+}
+
+_NULL_CM = nullcontext()
+
+
+def quantile(vals, p: float) -> float:
+    """Linear-interpolated percentile (``p`` in [0, 100]) matching
+    ``numpy.percentile``'s default method: rank ``(n-1)·p/100`` is
+    interpolated between the two bracketing order statistics, so p99
+    over a short series does NOT collapse to the max the way a
+    nearest-rank estimator does.  Pure python on a sorted copy — used
+    by both ``ServeStats.percentile`` and the registry windows."""
+    vals = sorted(vals)
+    n = len(vals)
+    if n == 0:
+        return 0.0
+    if n == 1:
+        return float(vals[0])
+    rank = (n - 1) * (float(p) / 100.0)
+    lo = int(rank)
+    hi = min(lo + 1, n - 1)
+    frac = rank - lo
+    return float(vals[lo] * (1.0 - frac) + vals[hi] * frac)
+
+
+class Counter:
+    """Monotonic (but resettable) cumulative value with a per-tick ring."""
+
+    __slots__ = ("name", "value", "ring")
+
+    def __init__(self, name: str, window: int):
+        self.name = name
+        self.value = 0.0
+        self.ring: deque = deque(maxlen=window)
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def reset(self) -> None:
+        self.value = 0.0
+        self.ring.clear()
+
+
+class Gauge:
+    """Last-set value with a per-tick ring of samples."""
+
+    __slots__ = ("name", "value", "ring")
+
+    def __init__(self, name: str, window: int):
+        self.name = name
+        self.value: float | None = None
+        self.ring: deque = deque(maxlen=window)
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def reset(self) -> None:
+        self.value = None
+        self.ring.clear()
+
+
+class Series(list):
+    """Unbounded sample list (a real ``list`` so existing
+    ``stats.step_ms.append(...)`` call sites keep working verbatim)
+    with rolling-quantile helpers over its tail."""
+
+    def __init__(self, name: str, iterable: Iterable[float] = ()):  # noqa: D107
+        super().__init__(iterable)
+        self.name = name
+
+    def quantile(self, p: float, window: int | None = None) -> float:
+        tail = self if window is None else self[-window:]
+        return quantile(tail, p)
+
+
+class MetricsRegistry:
+    """Name → metric registry with per-step windows.
+
+    Counters and gauges are cumulative/instantaneous; ``tick()`` (one
+    call per scheduler step when telemetry is on) snapshots each into a
+    bounded ring so windowed deltas/means need no timestamps.  Series
+    are unbounded sample lists (ServeStats latency series) with
+    rolling-quantile reads.  Metric objects are stable across
+    ``reset()`` so hot-path call sites can cache them."""
+
+    def __init__(self, window: int = 512):
+        self.window = int(window)
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._series: dict[str, Series] = {}
+        self._ticks = 0
+
+    # -- registration ------------------------------------------------
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name, self.window)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name, self.window)
+        return g
+
+    def series(self, name: str) -> Series:
+        s = self._series.get(name)
+        if s is None:
+            s = self._series[name] = Series(name)
+        return s
+
+    # -- windows -----------------------------------------------------
+    @property
+    def ticks(self) -> int:
+        return self._ticks
+
+    def tick(self) -> None:
+        """Snapshot every counter/gauge into its ring (one scheduler
+        step boundary).  O(#metrics) python appends, no device work."""
+        self._ticks += 1
+        for c in self._counters.values():
+            c.ring.append(c.value)
+        for g in self._gauges.values():
+            if g.value is not None:
+                g.ring.append(g.value)
+
+    def window_delta(self, name: str, n: int) -> float:
+        """Increase of counter ``name`` over the last ``n`` ticks."""
+        ring = self._counters[name].ring if name in self._counters else None
+        if not ring:
+            return 0.0
+        base = ring[-n - 1] if len(ring) > n else 0.0
+        return float(ring[-1] - base)
+
+    def window_mean(self, name: str, n: int) -> float:
+        """Mean of gauge ``name`` over its last ``n`` tick samples."""
+        ring = self._gauges[name].ring if name in self._gauges else None
+        if not ring:
+            return 0.0
+        tail = list(ring)[-n:]
+        return float(sum(tail) / len(tail))
+
+    def series_quantile(self, name: str, p: float, n: int | None = None) -> float:
+        s = self._series.get(name)
+        return s.quantile(p, n) if s else 0.0
+
+    def window_summary(self, n: int = 32) -> dict[str, Any]:
+        """The online-adviser signal vector over the last ``n`` steps
+        (ROADMAP "online adaptive adviser"): windowed speculation
+        acceptance, queue depth, pool occupancy/pressure, and step
+        cost, plus the admission/preemption/eviction rates that price a
+        re-decision.  Purely a read — token streams are unaffected."""
+        proposed = self.window_delta("serve.spec_proposed", n)
+        accepted = self.window_delta("serve.spec_accepted", n)
+        prompt = self.window_delta("serve.prompt_tokens", n)
+        hits = self.window_delta("serve.prefix_hit_tokens", n)
+        eff = max(1, min(n, self._ticks))
+        return {
+            "window": min(n, self._ticks),
+            "ticks": self._ticks,
+            "acceptance_rate": accepted / proposed if proposed else 0.0,
+            "proposed": proposed,
+            "accepted": accepted,
+            "queue_depth": self.window_mean("sched.queue_depth", n),
+            "active": self.window_mean("sched.active", n),
+            "pool_occupancy": self.window_mean("pool.occupancy", n),
+            "pool_free_blocks": self.window_mean("pool.free_blocks", n),
+            "step_cost_ms": self.series_quantile("serve.step_ms", 50.0, n),
+            "p99_step_ms": self.series_quantile("serve.step_ms", 99.0, n),
+            "admitted": self.window_delta("sched.admitted", n),
+            "preemptions": self.window_delta("serve.preemptions", n),
+            "rejected": self.window_delta("serve.rejected_submissions", n),
+            "prefix_hit_rate": hits / prompt if prompt else 0.0,
+            "chunk_utilization": self.series_quantile("sched.chunk_util", 50.0, n),
+            "alloc_rate": self.window_delta("pool.alloc", n) / eff,
+            "evict_rate": self.window_delta("pool.evict", n) / eff,
+            "park_rate": self.window_delta("pool.park", n) / eff,
+            "retraces": self.window_delta("engine.retraces", n),
+        }
+
+    # -- exposition --------------------------------------------------
+    def snapshot(self) -> dict[str, Any]:
+        """JSON-ready dump of every metric's current state."""
+        return {
+            "ticks": self._ticks,
+            "counters": {n: c.value for n, c in sorted(self._counters.items())},
+            "gauges": {n: g.value for n, g in sorted(self._gauges.items())},
+            "series": {
+                n: {
+                    "count": len(s),
+                    "p50": s.quantile(50.0),
+                    "p99": s.quantile(99.0),
+                }
+                for n, s in sorted(self._series.items())
+            },
+        }
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition (``.`` → ``_`` in names; series
+        exported as summary quantiles + count)."""
+        lines: list[str] = []
+        for name, c in sorted(self._counters.items()):
+            pname = name.replace(".", "_")
+            lines.append(f"# TYPE {pname} counter")
+            lines.append(f"{pname} {c.value:g}")
+        for name, g in sorted(self._gauges.items()):
+            if g.value is None:
+                continue
+            pname = name.replace(".", "_")
+            lines.append(f"# TYPE {pname} gauge")
+            lines.append(f"{pname} {g.value:g}")
+        for name, s in sorted(self._series.items()):
+            pname = name.replace(".", "_")
+            lines.append(f"# TYPE {pname} summary")
+            lines.append(f'{pname}{{quantile="0.5"}} {s.quantile(50.0):g}')
+            lines.append(f'{pname}{{quantile="0.99"}} {s.quantile(99.0):g}')
+            lines.append(f"{pname}_count {len(s)}")
+        return "\n".join(lines) + "\n"
+
+    def reset(self) -> None:
+        """Zero counters, clear gauges/series/rings IN PLACE — metric
+        objects cached by hot-path call sites stay valid."""
+        self._ticks = 0
+        for c in self._counters.values():
+            c.reset()
+        for g in self._gauges.values():
+            g.reset()
+        for s in self._series.values():
+            s.clear()
+
+
+class Tracer:
+    """Bounded ring-buffer flight recorder of Chrome trace events.
+
+    Events are stored as tuples ``(ph, name, cat, ts_us, dur_us, tid,
+    id, args)`` in a ``deque(maxlen=capacity)`` — appending is O(1) and
+    the buffer can never exceed its bound (oldest events are dropped
+    first, like a flight recorder).  Timestamps are microseconds from
+    the tracer's own ``perf_counter`` epoch."""
+
+    def __init__(self, capacity: int = 65536):
+        self.capacity = int(capacity)
+        self._events: deque = deque(maxlen=self.capacity)
+        self._t0 = time.perf_counter()
+
+    # -- recording ---------------------------------------------------
+    def now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def to_us(self, t: float) -> float:
+        """Convert a raw ``time.perf_counter()`` reading to trace µs."""
+        return (t - self._t0) * 1e6
+
+    def complete(self, name, cat, ts_us, dur_us, tid=TID_STEP, args=None) -> None:
+        self._events.append(("X", name, cat, ts_us, max(0.0, dur_us), tid, None, args))
+
+    def instant(self, name, cat, tid=TID_STEP, args=None, ts_us=None) -> None:
+        ts = self.now_us() if ts_us is None else ts_us
+        self._events.append(("i", name, cat, ts, None, tid, None, args))
+
+    def async_begin(self, name, id_, cat, args=None, ts_us=None) -> None:
+        ts = self.now_us() if ts_us is None else ts_us
+        self._events.append(("b", name, cat, ts, None, TID_REQUEST, id_, args))
+
+    def async_instant(self, name, id_, cat, args=None, ts_us=None) -> None:
+        ts = self.now_us() if ts_us is None else ts_us
+        self._events.append(("n", name, cat, ts, None, TID_REQUEST, id_, args))
+
+    def async_end(self, name, id_, cat, args=None, ts_us=None) -> None:
+        ts = self.now_us() if ts_us is None else ts_us
+        self._events.append(("e", name, cat, ts, None, TID_REQUEST, id_, args))
+
+    # -- reading -----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._events)
+
+    @property
+    def events(self) -> list[tuple]:
+        return list(self._events)
+
+    def clear(self) -> None:
+        self._events.clear()
+
+    def chrome_events(self) -> list[dict[str, Any]]:
+        """Render the ring to Chrome trace-event dicts, prefixed by
+        process/thread metadata so Perfetto labels the tracks."""
+        out: list[dict[str, Any]] = [
+            {
+                "name": "process_name",
+                "ph": "M",
+                "pid": TRACE_PID,
+                "tid": 0,
+                "args": {"name": "repro.serve"},
+            }
+        ]
+        for tid, tname in _THREAD_NAMES.items():
+            out.append(
+                {
+                    "name": "thread_name",
+                    "ph": "M",
+                    "pid": TRACE_PID,
+                    "tid": tid,
+                    "args": {"name": tname},
+                }
+            )
+        for ph, name, cat, ts, dur, tid, id_, args in self._events:
+            ev: dict[str, Any] = {
+                "name": name,
+                "cat": cat,
+                "ph": ph,
+                "ts": round(ts, 3),
+                "pid": TRACE_PID,
+                "tid": tid,
+            }
+            if ph == "X":
+                ev["dur"] = round(dur, 3)
+            if ph == "i":
+                ev["s"] = "t"
+            if id_ is not None:
+                ev["id"] = id_
+            if args:
+                ev["args"] = args
+            out.append(ev)
+        return out
+
+    def to_chrome_trace(self) -> dict[str, Any]:
+        return {"traceEvents": self.chrome_events(), "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> dict[str, Any]:
+        """Write Perfetto-loadable JSON to ``path``; returns the dict."""
+        trace = self.to_chrome_trace()
+        with open(path, "w") as f:
+            json.dump(trace, f, default=str)
+        return trace
+
+
+class Telemetry:
+    """Tracer (+ optional XLA annotations) behind one hard off-switch.
+
+    ``enabled=False`` (the default, and the module global's state) is
+    the off-switch the tentpole requires: every instrumentation site
+    guards on ``tel.enabled`` (or on a cached metric handle that is
+    ``None`` when disabled), so the serving hot path is unchanged.
+    ``xla_annotations=True`` additionally wraps device-launching phases
+    in ``jax.profiler.TraceAnnotation`` so XLA device profiles carry
+    our phase names — off by default even when tracing, since it adds
+    a TraceMe per launch."""
+
+    def __init__(
+        self,
+        enabled: bool = False,
+        capacity: int = 65536,
+        xla_annotations: bool = False,
+    ):
+        self.enabled = bool(enabled)
+        self.xla_annotations = bool(xla_annotations)
+        self.tracer = Tracer(capacity)
+        self._annotation_cls = None
+
+    def annotate(self, name: str):
+        """Context manager for a device-launching phase: a
+        ``jax.profiler.TraceAnnotation`` when enabled AND
+        ``xla_annotations`` is set, else a shared no-op context."""
+        if not (self.enabled and self.xla_annotations):
+            return _NULL_CM
+        if self._annotation_cls is None:
+            from jax.profiler import TraceAnnotation  # lazy: keep module jax-free
+
+            self._annotation_cls = TraceAnnotation
+        return self._annotation_cls(name)
+
+    def count(self, name: str, n: float = 1.0, registry: MetricsRegistry | None = None) -> None:
+        """Convenience for rare, engine-less call sites (backend
+        registry, mesh fallbacks): bump a counter on ``registry`` (or
+        the global one) iff enabled."""
+        if not self.enabled:
+            return
+        (registry or _GLOBAL_REGISTRY).counter(name).inc(n)
+
+
+# Module-global default: disabled. `configure()` flips it for CLI runs
+# (serving_load --trace, serve_decode --trace); tests build their own
+# `Telemetry()` instances and pass them to the engine for isolation.
+GLOBAL = Telemetry(enabled=False)
+_GLOBAL_REGISTRY = MetricsRegistry()
+
+
+def get_telemetry() -> Telemetry:
+    return GLOBAL
+
+
+def global_registry() -> MetricsRegistry:
+    """Registry backing engine-less counters recorded via
+    ``Telemetry.count`` (backend resolutions, mesh fallbacks)."""
+    return _GLOBAL_REGISTRY
+
+
+def configure(
+    enabled: bool = True,
+    capacity: int = 65536,
+    xla_annotations: bool = False,
+) -> Telemetry:
+    """(Re)arm the module-global telemetry — fresh tracer, same object
+    identity so call sites that grabbed ``get_telemetry()`` see it."""
+    GLOBAL.enabled = bool(enabled)
+    GLOBAL.xla_annotations = bool(xla_annotations)
+    GLOBAL.tracer = Tracer(capacity)
+    return GLOBAL
+
+
+_VALID_PH = {"X", "B", "E", "i", "I", "b", "n", "e", "M", "C", "s", "t", "f"}
+
+
+def validate_chrome_trace(trace: Any) -> dict[str, int]:
+    """Validate Chrome trace-event JSON structure; raises ``ValueError``
+    on the first violation, returns event counts on success.
+
+    Checks the schema chrome://tracing and Perfetto actually require:
+    a ``traceEvents`` list (or bare list) of dicts, each with a string
+    ``name``, known ``ph``, numeric ``ts`` (metadata exempt) and
+    ``pid``/``tid``; ``X`` events carry a non-negative ``dur``; async
+    ``b``/``n``/``e`` events carry an ``id`` and every ``e`` closes a
+    previously opened ``b`` of the same (cat, id)."""
+    events = trace.get("traceEvents") if isinstance(trace, dict) else trace
+    if not isinstance(events, list):
+        raise ValueError("trace must be a list or have a 'traceEvents' list")
+    counts = {"events": 0, "spans": 0, "async_spans": 0, "instants": 0}
+    open_async: dict[tuple, int] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"event {i}: not a dict")
+        ph = ev.get("ph")
+        if ph not in _VALID_PH:
+            raise ValueError(f"event {i}: bad ph {ph!r}")
+        if not isinstance(ev.get("name"), str):
+            raise ValueError(f"event {i}: missing name")
+        if ph != "M":
+            if not isinstance(ev.get("ts"), (int, float)):
+                raise ValueError(f"event {i}: missing ts")
+            if ev["ts"] < 0:
+                raise ValueError(f"event {i}: negative ts")
+        if "pid" not in ev or "tid" not in ev:
+            raise ValueError(f"event {i}: missing pid/tid")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"event {i}: X without non-negative dur")
+            counts["spans"] += 1
+        if ph in ("i", "I"):
+            counts["instants"] += 1
+        if ph in ("b", "n", "e"):
+            if "id" not in ev:
+                raise ValueError(f"event {i}: async {ph!r} without id")
+            key = (ev.get("cat"), ev["id"])
+            if ph == "b":
+                open_async[key] = open_async.get(key, 0) + 1
+                counts["async_spans"] += 1
+            elif ph == "e":
+                if open_async.get(key, 0) < 1:
+                    # the ring may have evicted the matching "b"; only a
+                    # strict violation when the buffer never wrapped
+                    raise ValueError(f"event {i}: async end without begin {key}")
+                open_async[key] -= 1
+        counts["events"] += 1
+    return counts
