@@ -58,7 +58,9 @@ def write_summary(rows, gm_pos, gm_all, ubench_us, serving=None, path="BENCH_air
     ``attention_backend`` sweep — p50 TPOT and per-step attention time
     per (KV layout × backend) plus the KernelAdvisorTool's measured
     backend decision — and the ``sharded`` mesh sweep's per-step
-    latency at mesh sizes {1,2,4} under bitwise token identity)."""
+    latency at mesh sizes {1,2,4} under bitwise token identity, plus
+    the ``online_adviser`` drift benchmark — closed-loop controller
+    p50 TPOT vs every static K arm and the per-phase-best oracle)."""
     summary = {
         "benchmarks": [
             {
@@ -133,6 +135,12 @@ def main() -> None:
     # p50-step overhead stays under the pinned factor, and the exported
     # trace validates (DESIGN.md §8)
     serving["observability"] = serving_load.run_observability()
+    print()
+    # online adaptive adviser on the drifting-draftability workload:
+    # the closed-loop controller must beat the worst static K arm's p50
+    # TPOT, track the per-phase-best oracle within tolerance, and
+    # switch retrace-free through the primed step grid (DESIGN.md §9)
+    serving["online_adviser"] = serving_load.run_drift()
     write_summary(rows, gm_pos, gm_all, ubench_us, serving=serving)
 
 

@@ -67,6 +67,19 @@ re-execs itself in a subprocess with a forced multi-device CPU host
 platform, so ``benchmarks.run`` still lands ``serving.sharded`` in the
 summary.
 
+The drift mode (``run_drift`` / ``--drift``) is the online-adviser
+proof (DESIGN.md §9): a phased workload whose draftability drifts
+(repetitive → churn → shared-prefix), served once per static K arm and
+once under the closed-loop ``OnlineAdviser`` (primed K × backend grid,
+live re-decision from telemetry windows). Every static arm loses in
+some phase; the controller must beat the worst static arm's p50 TPOT
+and land within ``oracle_tolerance`` of the per-phase-best oracle,
+with bitwise token identity across every arm, at least one live
+switch, and ZERO retraces after ``prime()`` — pinned both by the
+engine's jit-cache sizes and the ``engine.retraces`` counter. The
+decision audit trail is written to ``--drift``'s JSON path (the CI
+artifact).
+
 The observability mode (``run_observability`` / ``--trace [PATH]``)
 pins the flight-recorder contract (DESIGN.md §8): one warmed engine
 serves an identical paged + speculative + chunked workload with
@@ -477,6 +490,231 @@ def run_speculative(
     assert summary["tpot_p50_speedup"] > 0.9, (
         f"speculation made per-output-token latency materially worse "
         f"({summary['tpot_p50_speedup']:.2f}x vs the K=0 baseline)"
+    )
+    return summary
+
+
+def _jit_cache_size(engine) -> int:
+    """Total compile-cache entries across the engine's shared jitted
+    step fns — the drift benchmark's no-retrace witness: any mid-serve
+    K/backend switch that escaped the primed trace families grows it."""
+    fns = [engine._prefill, engine._prefill_prefix]
+    for family in engine._steps.values():
+        fns.extend(family.values())
+    return sum(
+        f._cache_size() for f in fns if f is not None and hasattr(f, "_cache_size")
+    )
+
+
+def run_drift(
+    *,
+    arch: str = "smollm-135m",
+    max_batch: int = 3,
+    rate_rps: float = 60.0,
+    ks=(0, 2, 4),
+    phase_n=(8, 10, 8),
+    rep_tokens: int = 24,
+    churn_tokens: int = 4,
+    churn_prompt_lens=(24, 32, 40),
+    prefix_len: int = 16,
+    decision_interval: int = 4,
+    window: int = 12,
+    oracle_tolerance: float = 1.6,
+    decisions_path=None,
+    seed: int = 0,
+    print_fn=print,
+) -> dict:
+    import json
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import OnlineAdviser, ServingEngine, SpecConfig, Telemetry
+    from repro.serve.load import make_drift_requests
+
+    # mid-size (run_speculative sizing): a saved decode step must be
+    # real compute, or no arm separates from any other
+    cfg = dataclasses.replace(
+        get_config(arch).reduced(),
+        num_layers=4, d_model=128, d_ff=384, n_heads=4, n_kv_heads=2, head_dim=32,
+    )
+    model = Model(cfg)
+    params, _ = model.init(jax.random.key(seed))
+    engine = ServingEngine(model, params, max_seq=64, kv_layout="paged", block_size=8)
+    ks = tuple(sorted({int(k) for k in ks}))
+    kmax = max(ks)
+    # one shared header across every draw, so warmup and measured runs
+    # hit the same prefix-cache entries
+    prefix = (
+        np.random.default_rng(seed + 7)
+        .integers(0, cfg.vocab_size, size=(prefix_len,))
+        .astype(np.int32)
+    )
+
+    def workload(rng_seed=seed):
+        # churn: long random prompts (an expensive n-gram scan per draft
+        # round, nothing draftable in them) with tiny budgets — every
+        # speculated token is pure overhead there
+        return make_drift_requests(
+            phase_n, rate_rps, vocab=cfg.vocab_size, rep_tokens=rep_tokens,
+            churn_tokens=churn_tokens, churn_prompt_lens=churn_prompt_lens,
+            prefix_len=prefix_len,
+            rng=np.random.default_rng(rng_seed), prefix=prefix,
+        )
+
+    def spec_for(k):
+        return SpecConfig(k=k, drafter="ngram") if k else SpecConfig(k=0)
+
+    # prime the K × backend grid (decode + every verify width), then warm
+    # each arm's full trace family on the real workload shapes (prefill
+    # buckets, prefix path); everything after this must be a cache hit
+    primed = engine.prime(max_batch, ks=ks)
+    for k in ks:
+        reqs, _ = workload()
+        engine.serve(reqs, max_batch=max_batch, seed=seed, spec=spec_for(k))
+    cache_warm = _jit_cache_size(engine)
+
+    def _tpots(rs):
+        return [r.tpot_ms for r in rs if r.tpot_ms is not None]
+
+    def _p50(vals):
+        return float(np.percentile(vals, 50)) if vals else 0.0
+
+    # measured static arms: identical workload per arm, per-phase TPOT.
+    # Every measured run — static and controlled — serves through the
+    # same enabled flight recorder: the controller NEEDS the windowed
+    # metrics, so the static arms pay the identical instrumented cost
+    # (policies are compared, not telemetry overhead)
+    tel = Telemetry(enabled=True, capacity=8192)
+    arm_tpots, phase_tpots, outputs = {}, {}, {}
+    spans = None
+    for k in ks:
+        reqs, spans = workload()
+        out = engine.serve(
+            reqs, max_batch=max_batch, seed=seed, spec=spec_for(k), telemetry=tel
+        )
+        outputs[k] = [np.asarray(out[r.rid]) for r in reqs]
+        arm_tpots[k] = _tpots(reqs)
+        phase_tpots[k] = {name: _tpots(reqs[s:e]) for name, s, e in spans}
+
+    # the controller run: deepest arm's margin + drafter, live depth
+    # re-decided every decision_interval steps from the telemetry window
+    ctl = OnlineAdviser(
+        ks=ks, decision_interval=decision_interval, window=window,
+        dwell=1, threshold=0.03, probe_every=2,
+    )
+    ctl.seed_costs(primed)
+    reqs, spans = workload()
+    out = engine.serve(
+        reqs, max_batch=max_batch, seed=seed,
+        spec=SpecConfig(k=kmax, drafter="ngram"), controller=ctl, telemetry=tel,
+    )
+    ctl_outputs = [np.asarray(out[r.rid]) for r in reqs]
+    ctl_tpots = _tpots(reqs)
+    ctl_phase = {name: _tpots(reqs[s:e]) for name, s, e in spans}
+    cache_end = _jit_cache_size(engine)
+    retraces = engine.stats.registry.counter("engine.retraces").value
+
+    # deterministic contracts first: greedy streams are invariant under
+    # speculation depth AND under live re-decision of it
+    for k in ks[1:]:
+        for a, b in zip(outputs[ks[0]], outputs[k]):
+            np.testing.assert_array_equal(a, b)
+    for a, b in zip(outputs[ks[0]], ctl_outputs):
+        np.testing.assert_array_equal(a, b)
+    assert len(ctl.decisions) > 0, "controller never reached a decision interval"
+    assert ctl.n_switches >= 1, (
+        f"controller never switched arms across a drifting workload "
+        f"(decisions={len(ctl.decisions)})"
+    )
+    assert cache_end == cache_warm, (
+        f"live switching retraced: jit cache grew {cache_warm} → {cache_end} "
+        f"after prime+warmup"
+    )
+    assert retraces == 0, f"engine.retraces counter saw {retraces} mid-run compiles"
+
+    # the latency contract: controller beats the worst static arm and
+    # tracks the per-phase-best oracle (tpot pooled from each phase's
+    # winning arm) within tolerance
+    arm_p50 = {k: _p50(arm_tpots[k]) for k in ks}
+    worst_k = max(ks, key=lambda k: arm_p50[k])
+    best_static_k = min(ks, key=lambda k: arm_p50[k])
+    phase_best, oracle_pool = {}, []
+    for name, _, _ in spans:
+        bk = min(ks, key=lambda k: _p50(phase_tpots[k][name]))
+        phase_best[name] = bk
+        oracle_pool.extend(phase_tpots[bk][name])
+    oracle_p50 = _p50(oracle_pool)
+    ctl_p50 = _p50(ctl_tpots)
+
+    summary = {
+        "arch": arch,
+        "ks": list(ks),
+        "phases": [
+            {
+                "name": name,
+                "n": e - s,
+                "best_k": phase_best[name],
+                **{f"k{k}_p50_tpot_ms": _p50(phase_tpots[k][name]) for k in ks},
+                "controller_p50_tpot_ms": _p50(ctl_phase[name]),
+            }
+            for name, s, e in spans
+        ],
+        **{f"k{k}_p50_tpot_ms": arm_p50[k] for k in ks},
+        "worst_static_k": worst_k,
+        "best_static_k": best_static_k,
+        "oracle_p50_tpot_ms": oracle_p50,
+        "controller_p50_tpot_ms": ctl_p50,
+        "controller_vs_worst": arm_p50[worst_k] / ctl_p50 if ctl_p50 else 0.0,
+        "controller_vs_oracle": ctl_p50 / oracle_p50 if oracle_p50 else 0.0,
+        "decisions": len(ctl.decisions),
+        "switches": ctl.n_switches,
+        "retraces_after_prime": int(cache_end - cache_warm),
+        "controller": ctl.summary(),
+    }
+
+    print_fn("# serving — drift workload (online adviser vs static K arms)")
+    print_fn(
+        f"arch={arch} phases={[n for n, _, _ in spans]} "
+        f"requests={sum(int(n) for n in phase_n)} ks={list(ks)}"
+    )
+    for ph in summary["phases"]:
+        cells = " ".join(f"K={k}:{ph[f'k{k}_p50_tpot_ms']:.2f}ms" for k in ks)
+        print_fn(
+            f"{ph['name']:>13}: {cells} ctl:{ph['controller_p50_tpot_ms']:.2f}ms "
+            f"(best K={ph['best_k']})"
+        )
+    print_fn(
+        f"overall p50 tpot: "
+        + " ".join(f"K={k}:{arm_p50[k]:.2f}ms" for k in ks)
+        + f" oracle:{oracle_p50:.2f}ms controller:{ctl_p50:.2f}ms"
+    )
+    print_fn(
+        f"controller: {len(ctl.decisions)} decisions, {ctl.n_switches} switches, "
+        f"{int(cache_end - cache_warm)} retraces after prime"
+    )
+    for d in ctl.audit_trail():
+        print_fn(
+            f"  step {d['step']:>3}: k={d['k']} backend={d['backend']}"
+            + (" [probe]" if d["probe"] else "")
+            + (f" gain={d['predicted_gain']:+.1%}" if d["switched"] else "")
+            + f" — {d['reason']}"
+        )
+    if decisions_path:
+        with open(decisions_path, "w") as f:
+            json.dump(
+                {"decisions": ctl.audit_trail(), "controller": ctl.summary(),
+                 "summary": {k: v for k, v in summary.items() if k != "phases"}},
+                f, indent=2, default=str,
+            )
+        print_fn(f"decision audit trail → {decisions_path}")
+
+    assert ctl_p50 < arm_p50[worst_k], (
+        f"controller p50 TPOT {ctl_p50:.2f}ms did not beat the worst static "
+        f"arm K={worst_k} ({arm_p50[worst_k]:.2f}ms)"
+    )
+    assert ctl_p50 <= oracle_p50 * oracle_tolerance, (
+        f"controller p50 TPOT {ctl_p50:.2f}ms outside {oracle_tolerance}x of "
+        f"the per-phase-best oracle ({oracle_p50:.2f}ms)"
     )
     return summary
 
@@ -1036,6 +1274,14 @@ if __name__ == "__main__":
                     help="attention-backend mode: serve both KV layouts through "
                          "NAME and the reference backend, asserting token "
                          "identity (CI kernel smoke: --backend interpret)")
+    ap.add_argument("--drift", metavar="PATH", nargs="?", const="drift_decisions.json",
+                    default=None,
+                    help="online-adviser mode: serve the drifting-"
+                         "draftability workload per static K and under the "
+                         "closed-loop controller (token identity, zero "
+                         "retraces after prime, controller beats the worst "
+                         "static arm — CI drift smoke), writing the decision "
+                         "audit trail to PATH (default drift_decisions.json)")
     ap.add_argument("--chunked", action="store_true",
                     help="SLO-goodput mode: chunked vs monolithic prefill on "
                          "the mixed-priority workload")
@@ -1066,6 +1312,8 @@ if __name__ == "__main__":
         run_speculative()
     elif args.backend:
         run_backend_sweep(backends=("reference", args.backend))
+    elif args.drift:
+        run_drift(decisions_path=args.drift)
     elif args.trace:
         run_observability(trace_path=args.trace)
     elif args.chunked:

@@ -28,6 +28,16 @@ kernel code interpreted on CPU (token-identical by the CI differential
 contract), and ``auto`` (default) resolves per platform via the ops
 registry (``REPRO_ATTENTION_BACKEND`` overrides).
 
+``--online`` attaches the closed-loop ``OnlineAdviser`` in open-loop
+mode (DESIGN.md §9): ``engine.prime()`` pre-jits and price-measures the
+K × backend grid, the controller re-decides the speculation depth (and
+admission budget under pool pressure) every few steps from the
+telemetry windows, and the decision audit trail is printed when the run
+finishes. Switching is retrace-free — every arm is a trace-cache hit
+after priming — and token streams stay exactly greedy. Mutually
+exclusive with ``--aira`` (both rewrite how the decode step is driven);
+with ``--spec K`` the controller's candidate depths cap at K.
+
 ``--chunk N`` turns on chunked prefill in open-loop mode: at most N
 prompt tokens of prefill are admitted per decode step, so a long
 prompt's prefill interleaves with running decodes instead of stalling
@@ -53,7 +63,7 @@ with a logged warning.
   PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-2.7b]
       [--int8-kv] [--paged] [--spec 4] [--tokens 32] [--batch 4]
       [--aira] [--open-loop 8] [--rate 20] [--backend interpret]
-      [--chunk 16] [--mesh 2] [--trace serve_trace.json]
+      [--chunk 16] [--mesh 2] [--online] [--trace serve_trace.json]
 """
 import argparse
 import dataclasses
@@ -112,6 +122,12 @@ def main():
                          "decode/verify per-shard (DESIGN.md §5; requires "
                          "--paged and --open-loop; token streams stay "
                          "bitwise single-device)")
+    ap.add_argument("--online", action="store_true",
+                    help="closed-loop serving: prime the K × backend grid, "
+                         "attach the OnlineAdviser (live K/admission "
+                         "re-decision from telemetry windows, retrace-free), "
+                         "and print the decision audit trail (DESIGN.md §9; "
+                         "requires --open-loop)")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="arm the serving flight recorder and export "
                          "Chrome/Perfetto trace-event JSON to PATH "
@@ -130,6 +146,10 @@ def main():
         cfg = dataclasses.replace(cfg, kv_quant=True)
     if args.spec and args.aira:
         raise SystemExit("--spec and --aira both rewrite the decode step; pick one")
+    if args.online and args.aira:
+        raise SystemExit("--online and --aira both re-decide the decode step; pick one")
+    if args.online and not args.open_loop:
+        raise SystemExit("--online rides the serve() path; add --open-loop N")
     mesh = None
     if args.mesh > 1:
         if not args.paged:
@@ -189,8 +209,26 @@ def main():
             max_new_tokens=args.tokens,
             rng=np.random.default_rng(0),
         )
+        controller = None
+        if args.online:
+            from repro.serve import OnlineAdviser
+
+            # pre-jit + price-measure the candidate grid: every live
+            # switch the controller makes is a trace-cache hit
+            ks = (0, args.spec) if args.spec else (0, 2, 4)
+            primed = engine.prime(args.batch, ks=ks)
+            controller = OnlineAdviser(
+                ks=primed["ks"], decision_interval=4, window=8, dwell=1,
+            )
+            controller.seed_costs(primed)
+            cells = primed["cells"][engine.attention_backend]
+            print(
+                "primed: "
+                + " ".join(f"K={k}:{ms:.2f}ms" for k, ms in sorted(cells.items()))
+            )
         outputs = engine.serve(
-            reqs, max_batch=args.batch, chunk_size=args.chunk, mesh=mesh
+            reqs, max_batch=args.batch, chunk_size=args.chunk, mesh=mesh,
+            controller=controller,
         )
         for r in reqs:
             print(
@@ -200,6 +238,19 @@ def main():
             )
         assert all(len(outputs[r.rid]) == len(r.tokens) for r in reqs)
         print(f"open-loop serving: {engine.stats.summary()}")
+        if controller is not None:
+            info = engine.stats.serving_summary().get("controller", {})
+            print(
+                f"online adviser: {info.get('decisions', 0)} decisions, "
+                f"{info.get('switches', 0)} switches, final K={info.get('k')} "
+                f"backend={info.get('backend')}"
+            )
+            for d in controller.audit_trail():
+                print(
+                    f"  step {d['step']:>3}: k={d['k']}"
+                    + (" [probe]" if d["probe"] else "")
+                    + f" — {d['reason']}"
+                )
     else:
         out = engine.generate(prompts, args.tokens)
         print(f"generated {out.shape} tokens; first row: {out[0][:12].tolist()}")

@@ -255,6 +255,59 @@ def expected_tokens_per_round(p: float, k: int) -> float:
     return float(sum(p**i for i in range(k + 1)))
 
 
+def price_speculation(m: SpecMeasurement, ks, threshold: float = 0.02):
+    """The speculation pricing analytic, as a pure function: expected
+    per-output-token latency at each candidate depth in ``ks`` from a
+    measured (or live-estimated) draft cost, verify cost, and
+    acceptance rate, gated on ``threshold`` predicted gain.
+
+    Shared verbatim by the offline gate (``SpeculationAdvisorTool``,
+    whose golden decisions pin these numbers) and the online controller
+    (``serve.controller.OnlineAdviser``, which substitutes windowed
+    live estimates for the offline probe). Returns ``(best_k,
+    best_cost_ms_per_token, gain_vs_k0, costs)`` where ``costs`` maps
+    every priced depth (including 0) to its expected ms/output-token.
+    """
+    base = m.verify_cost(0)
+    costs = {0: base}
+    best_k, best_cost = 0, base
+    for k in ks:
+        if k <= 0:
+            continue
+        cost = (k * m.draft_ms_per_token + m.verify_cost(k)) / (
+            expected_tokens_per_round(m.acceptance_rate, k)
+        )
+        costs[int(k)] = cost
+        if cost < best_cost:
+            best_k, best_cost = k, cost
+    gain = (base / best_cost - 1.0) if best_cost > 0 else 0.0
+    if gain <= threshold:
+        best_k, best_cost, gain = 0, base, 0.0
+    return best_k, best_cost, gain, costs
+
+
+def price_backends(step_ms: dict, threshold: float = 0.02, baseline: str = "reference"):
+    """The backend pricing analytic, as a pure function: pick the
+    cheapest measured backend, committing away from ``baseline`` only
+    when the predicted gain clears ``threshold`` — the same
+    commit-only-on-predicted-win rule as ``price_speculation``.
+
+    Shared verbatim by the offline gate (``KernelAdvisorTool``, whose
+    baseline is always ``"reference"``) and the online controller
+    (whose baseline is the *currently serving* backend, so hysteresis
+    is priced against the status quo). Returns ``(best_backend,
+    best_ms, gain_vs_baseline)``."""
+    base = float(step_ms[baseline])
+    best, best_ms = baseline, base
+    for backend, ms in sorted(step_ms.items()):
+        if backend != baseline and float(ms) < best_ms:
+            best, best_ms = backend, float(ms)
+    gain = (base / best_ms - 1.0) if best_ms > 0 else 0.0
+    if gain <= threshold:
+        best, best_ms, gain = baseline, base, 0.0
+    return best, best_ms, gain
+
+
 class SpeculationAdvisorTool:
     """Sniper-gate analogue for speculative serving: price expected
     per-output-token latency at each candidate depth from a measured
@@ -276,19 +329,8 @@ class SpeculationAdvisorTool:
 
     def choose(self, m: SpecMeasurement, threshold: float = 0.02):
         """(chosen K, predicted gain, log line) for measurement ``m``."""
+        best_k, best_cost, gain, _costs = price_speculation(m, self.ks, threshold)
         base = m.verify_cost(0)
-        best_k, best_cost = 0, base
-        for k in self.ks:
-            if k <= 0:
-                continue
-            cost = (k * m.draft_ms_per_token + m.verify_cost(k)) / (
-                expected_tokens_per_round(m.acceptance_rate, k)
-            )
-            if cost < best_cost:
-                best_k, best_cost = k, cost
-        gain = (base / best_cost - 1.0) if best_cost > 0 else 0.0
-        if gain <= threshold:
-            best_k, best_cost, gain = 0, base, 0.0
         log = (
             f"accept={m.acceptance_rate:.2f} "
             f"draft={m.draft_ms_per_token:.3f}ms/tok "
@@ -375,14 +417,7 @@ class KernelAdvisorTool:
     def choose(self, m: KernelMeasurement, threshold: float = 0.02):
         """(chosen backend, predicted gain, log line) for cell ``m``."""
         t = m.timings
-        base = float(t["reference"])
-        best, best_ms = "reference", base
-        for backend, ms in sorted(t.items()):
-            if backend != "reference" and float(ms) < best_ms:
-                best, best_ms = backend, float(ms)
-        gain = (base / best_ms - 1.0) if best_ms > 0 else 0.0
-        if gain <= threshold:
-            best, best_ms, gain = "reference", base, 0.0
+        best, best_ms, gain = price_backends(t, threshold, baseline="reference")
         timings = " ".join(f"{b}={float(ms):.2f}ms" for b, ms in sorted(t.items()))
         log = (
             f"{m.family}/{m.layout}/K={m.k}: {timings} → {best} "

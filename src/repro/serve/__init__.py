@@ -1,4 +1,9 @@
 from repro.serve.block import BlockAllocator, PrefixCache  # noqa: F401
+from repro.serve.controller import (  # noqa: F401
+    Decision,
+    OnlineAdviser,
+    PinnedController,
+)
 from repro.serve.differential import (  # noqa: F401
     assert_logits_close,
     assert_streams_equal,
@@ -7,6 +12,7 @@ from repro.serve.differential import (  # noqa: F401
 from repro.serve.engine import ServingEngine  # noqa: F401
 from repro.serve.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
 from repro.serve.load import (  # noqa: F401
+    make_drift_requests,
     make_requests,
     make_shared_prefix_requests,
     make_slo_requests,

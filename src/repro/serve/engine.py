@@ -45,7 +45,9 @@ it *servable*: requests are admitted, decoded, and retired individually
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
+import time
 from typing import Optional
 
 import jax
@@ -315,6 +317,104 @@ class ServingEngine:
             )
         return fns["verify"], fns.get("verify_paged")
 
+    def prime(
+        self,
+        max_batch: Optional[int] = None,
+        *,
+        ks=(0, 2, 4, 8),
+        backends=None,
+        kv_layout: Optional[str] = None,
+        reps: int = 2,
+    ) -> dict:
+        """Pre-jit (and measure) the K × backend decode/verify grid an
+        online controller can switch across (DESIGN.md §9).
+
+        Each candidate depth is one ``[max_batch, k+1]`` verify trace in
+        the shared jitted verify fn (jit caches per input shape) and
+        each backend one entry in the engine's step-fn cache, so after
+        this every mid-serve switch the controller makes is a trace-
+        cache hit — the drift benchmark pins that with trace counters.
+        ``max_batch`` must match the pool size later serves use (pool
+        shapes are static). Depths are clamped to ``(0,)`` for model
+        families without a rewindable cache. Runs against a throwaway
+        pool (all rows dead — writes route to the null block / junk
+        slots), timing ``reps`` calls per cell, and returns
+        ``{"cells": {backend: {k: ms}}, "ks", "backends", ...}`` —
+        feed it to ``OnlineAdviser.seed_costs`` so the first decision
+        prices measured numbers."""
+        from repro.models.model import SPEC_FAMILIES
+        from repro.serve.kv_cache import PagedKVCache
+
+        mb = int(max_batch or self.max_batch or 4)
+        layout = kv_layout or self.kv_layout
+        if self.model.cfg.family not in SPEC_FAMILIES:
+            ks = (0,)
+        ks = tuple(sorted({int(k) for k in ks}))
+        names = backends if backends else (self.attention_backend,)
+        names = tuple(
+            dict.fromkeys(
+                kernel_ops.resolve_attention_backend(b, mesh=self.mesh)
+                for b in names
+            )
+        )
+        tok = jnp.zeros((mb, 1), jnp.int32)
+        cells: dict[str, dict[int, float]] = {}
+
+        def _time(fn) -> float:
+            jax.block_until_ready(fn())  # compile (not timed)
+            t0 = time.perf_counter()
+            for _ in range(max(1, reps)):
+                jax.block_until_ready(fn())
+            return (time.perf_counter() - t0) / max(1, reps) * 1e3
+
+        for backend in names:
+            per_k: dict[int, float] = {}
+            if layout == "paged":
+                kv = PagedKVCache(
+                    self.model, mb, self.max_seq,
+                    block_size=self.block_size, num_blocks=self.num_blocks,
+                    prefix_cache=False, mesh=self.mesh,
+                )
+                pool, tables, lens = kv.kernel_inputs()
+                decode_paged, _ = self._paged_fns(backend)
+                verify_paged = None
+                if any(k > 0 for k in ks):
+                    _, verify_paged = self._spec_fns("paged", backend)
+                for k in ks:
+                    if k == 0:
+                        per_k[0] = _time(
+                            lambda: decode_paged(self.params, pool, tables, lens, tok)[0]
+                        )
+                    else:
+                        blk = jnp.zeros((mb, k + 1), jnp.int32)
+                        per_k[k] = _time(
+                            lambda blk=blk: verify_paged(
+                                self.params, pool, tables, lens, blk
+                            )[0]
+                        )
+            else:
+                cache = self.model.init_cache(mb, self.max_seq)
+                decode = self._step_fns(backend)["decode"]
+                verify = None
+                if any(k > 0 for k in ks):
+                    verify, _ = self._spec_fns("slot", backend)
+                for k in ks:
+                    if k == 0:
+                        per_k[0] = _time(lambda: decode(self.params, cache, tok)[0])
+                    else:
+                        blk = jnp.zeros((mb, k + 1), jnp.int32)
+                        per_k[k] = _time(
+                            lambda blk=blk: verify(self.params, cache, blk)[0]
+                        )
+            cells[backend] = per_k
+        return {
+            "cells": cells,
+            "ks": ks,
+            "backends": names,
+            "max_batch": mb,
+            "layout": layout,
+        }
+
     def scheduler(
         self,
         max_batch: int,
@@ -325,6 +425,7 @@ class ServingEngine:
         attention_backend: Optional[str] = None,
         chunk_size: Optional[int] = None,
         telemetry=None,
+        controller=None,
     ) -> Scheduler:
         """A fresh continuous-batching scheduler over ``max_batch`` rows
         (slots, or paged block tables), sharing this engine's stats,
@@ -336,7 +437,14 @@ class ServingEngine:
         engine's chunked-prefill budget (``0`` disables for this call).
         ``telemetry`` overrides the engine's flight recorder for this
         scheduler (the instrumented-vs-off overhead benchmark serves the
-        same warmed engine both ways)."""
+        same warmed engine both ways). ``controller`` attaches an online
+        adviser (DESIGN.md §9) that re-decides K/backend/admission from
+        the windowed telemetry mid-run — the scheduler switches through
+        this engine's pre-warmed step families (``prime()`` makes every
+        switch a trace-cache hit); when the controller carries positive
+        candidate depths and no ``spec`` is set, a default n-gram
+        ``SpecConfig(k=max(ks))`` is installed so the margin and drafter
+        cover the deepest arm."""
         layout = kv_layout or self.kv_layout
         if self.mesh is not None and layout != "paged":
             raise ValueError(
@@ -350,6 +458,17 @@ class ServingEngine:
         backend = kernel_ops.resolve_attention_backend(
             attention_backend or self.attention_backend, mesh=self.mesh
         )
+        if controller is not None:
+            ctl_ks = tuple(getattr(controller, "ks", (0,)))
+            kmax = max(ctl_ks) if ctl_ks else 0
+            if kmax > 0 and (spec is None or spec.k < kmax):
+                from repro.serve.speculative import SpecConfig
+
+                spec = (
+                    SpecConfig(k=kmax, drafter="ngram")
+                    if spec is None
+                    else dataclasses.replace(spec, k=kmax)
+                )
         if self._decode_plan is not None and backend != self.attention_backend:
             # the plan's per-request fn captured the engine backend when
             # the region was advised; honoring a different per-call
@@ -378,6 +497,26 @@ class ServingEngine:
             if "prefill_chunk" not in fns:
                 fns["prefill_chunk"] = self.model.jit_step("prefill_chunk", backend)
             paged_kw.update(chunk_prefill_fn=fns["prefill_chunk"])
+        if controller is not None:
+            # live backend re-decision resolves into THIS engine's shared
+            # step-fn caches — after prime() every switch is a cache hit
+            _spec, _chunk, _layout = spec, chunk, layout
+
+            def _resolver(b):
+                rb = kernel_ops.resolve_attention_backend(b, mesh=self.mesh)
+                out = {"backend": rb, "decode": self._step_fns(rb)["decode"]}
+                if _layout == "paged":
+                    out["decode_paged"], _ = self._paged_fns(rb)
+                if _spec is not None and _spec.k > 0:
+                    out["verify"], out["verify_paged"] = self._spec_fns(_layout, rb)
+                if _chunk is not None:
+                    f = self._step_fns(rb)
+                    if "prefill_chunk" not in f:
+                        f["prefill_chunk"] = self.model.jit_step("prefill_chunk", rb)
+                    out["prefill_chunk"] = f["prefill_chunk"]
+                return out
+
+            paged_kw.update(controller=controller, step_fn_resolver=_resolver)
         return Scheduler(
             self.model,
             self.params,
@@ -410,19 +549,23 @@ class ServingEngine:
         chunk_size: Optional[int] = None,
         mesh=None,
         telemetry=None,
+        controller=None,
     ) -> dict:
         """Continuous-batching entry: drive ``requests`` (each with its
         own arrival time, prompt length, and token budget) to completion
         through a slotted or block-paged pool, optionally speculating
         ``spec.k`` draft tokens per verify (greedy streams unchanged —
         ``spec`` usually comes from ``speculative.advise_depth``),
-        optionally overriding the attention backend for this run, and
+        optionally overriding the attention backend for this run,
         optionally chunking prefill (``chunk_size`` tokens per step;
-        ``0`` forces monolithic). ``mesh`` must match the engine's
-        serving mesh (the sharded step family and the replicated params
-        are built against it at construction); passing it on a mesh-less
-        engine adopts it, provided no step has been jitted yet. Returns
-        rid → generated tokens."""
+        ``0`` forces monolithic), and optionally closed-loop controlled
+        (``controller=OnlineAdviser(...)`` re-decides K/backend/
+        admission from live telemetry — see ``scheduler()``; run
+        ``prime()`` first so every switch is retrace-free). ``mesh``
+        must match the engine's serving mesh (the sharded step family
+        and the replicated params are built against it at construction);
+        passing it on a mesh-less engine adopts it, provided no step has
+        been jitted yet. Returns rid → generated tokens."""
         if mesh is not None and mesh is not self.mesh:
             if self.mesh is not None:
                 raise ValueError(
@@ -455,7 +598,7 @@ class ServingEngine:
         return self.scheduler(
             mb, seed=seed, kv_layout=kv_layout, spec=spec,
             attention_backend=attention_backend, chunk_size=chunk_size,
-            telemetry=telemetry,
+            telemetry=telemetry, controller=controller,
         ).run(requests)
 
     def _sample(self, logits, key):

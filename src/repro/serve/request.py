@@ -157,12 +157,18 @@ class ServeStats:
             attr: self.registry.counter(metric)
             for attr, metric in self._COUNTERS.items()
         }
+        # online-adviser state for serving_summary(): populated by the
+        # scheduler per decision when a controller runs, None otherwise
+        # (the "controller" key appears only when a controller ran, so
+        # the golden summary schema is unchanged for plain runs)
+        self.controller_info: Optional[dict] = None
 
     def reset(self) -> None:
         """Start a run from clean series — percentiles never mix runs.
         Resets the whole registry in place (series/counters/gauges and
         tick rings), so cached metric handles stay valid."""
         self.registry.reset()
+        self.controller_info = None
 
     def record(self, req: Request) -> None:
         """Fold a finished request's latencies into the run series."""
@@ -266,6 +272,8 @@ class ServeStats:
                 "p50_draft_ms": self.percentile(50, "draft_ms"),
                 "p50_verify_ms": self.percentile(50, "verify_ms"),
             }
+        if self.controller_info:
+            out["controller"] = dict(self.controller_info)
         return out
 
 

@@ -80,7 +80,7 @@ from repro.serve.request import (
     Request,
     ServeStats,
 )
-from repro.serve.telemetry import get_telemetry
+from repro.serve.telemetry import TID_ADVISER, Telemetry, get_telemetry
 
 
 @dataclass
@@ -126,6 +126,8 @@ class Scheduler:
         plan_step_cache: Optional[dict] = None,
         mesh=None,
         telemetry=None,
+        controller=None,
+        step_fn_resolver=None,
     ):
         self.model = model
         self.params = params
@@ -137,6 +139,14 @@ class Scheduler:
         # off-switch — every instrumentation site below guards on it,
         # so a disabled tracer leaves the hot path as it was.
         self.tel = telemetry if telemetry is not None else get_telemetry()
+        # an online controller senses through the windowed metric rings,
+        # so a controller-driven scheduler records into a private live
+        # Telemetry when the caller left the recorder off — the module-
+        # global off-switch contract (disabled ⇒ untouched hot path) is
+        # unchanged for controller-less runs (DESIGN.md §9)
+        self.controller = controller
+        if controller is not None and not self.tel.enabled:
+            self.tel = Telemetry(enabled=True, capacity=8192)
         self._ton = bool(self.tel.enabled)
         self.stats = stats if stats is not None else ServeStats()
         if self._ton:
@@ -152,6 +162,7 @@ class Scheduler:
         if kv_layout not in ("slot", "paged"):
             raise ValueError(f"kv_layout must be 'slot' or 'paged', got {kv_layout!r}")
         self.kv_layout = kv_layout
+        self._mesh = mesh
         if kv_layout == "paged":
             if decode_plan is not None:
                 raise ValueError(
@@ -249,6 +260,17 @@ class Scheduler:
             self._verify_paged = paged_verify_fn or (
                 model.jit_step("verify_step_paged", be) if kv_layout == "paged" else None
             )
+        # live speculation depth: SpecConfig.k is the *maximum* (it sizes
+        # the admission margin, the drafter overhang, and the deepest
+        # pre-warmed verify trace); a controller re-decides the serving
+        # depth within [0, spec.k] mid-run, retrace-free
+        self._live_k = self.spec.k if self.spec is not None else 0
+        self._fn_resolver = step_fn_resolver
+        self._local_fns: dict[str, dict] = {}  # standalone resolver cache
+        self._ctl_steps = 0
+        self._admit_budget: Optional[int] = None
+        if controller is not None:
+            self._wire_controller(controller)
         self._plan_steps = plan_step_cache if plan_step_cache is not None else {}
         self._decode_plan = None
         self._t0: Optional[float] = None
@@ -257,23 +279,195 @@ class Scheduler:
         if self._ton:
             # retrace watch: jitted-step compile-cache sizes, sampled at
             # step boundaries — growth mid-run means a shape escaped its
-            # trace family (the no-retrace contract the chunked tests pin)
-            self._traced_fns = [
-                f
-                for f in (
-                    self._prefill,
-                    self._decode,
-                    self._decode_paged,
-                    self._prefill_prefix,
-                    self._prefill_chunk,
-                    self._verify,
-                    self._verify_paged,
+            # trace family (the no-retrace contract the chunked tests pin).
+            # Baseline now: engine-shared fns arrive pre-warmed, and those
+            # compiles are not this run's retraces.
+            self._rebuild_trace_watch()
+
+    def _rebuild_trace_watch(self) -> None:
+        """(Re)collect the jitted step fns under retrace watch and
+        re-baseline their compile-cache sizes — called at construction
+        and after a live backend swap installs a different fn family."""
+        self._traced_fns = [
+            f
+            for f in (
+                self._prefill,
+                self._decode,
+                self._decode_paged,
+                self._prefill_prefix,
+                self._prefill_chunk,
+                self._verify,
+                self._verify_paged,
+            )
+            if f is not None and hasattr(f, "_cache_size")
+        ]
+        self._cache_size_seen = sum(f._cache_size() for f in self._traced_fns)
+
+    # ------------------------------------------------------------------
+    # online adaptive adviser (DESIGN.md §9): observe → decide → apply
+    def _wire_controller(self, controller) -> None:
+        """Validate the controller's candidate arms against this
+        scheduler's capacity and apply its initial arm.  The deepest
+        candidate must fit inside ``spec.k`` (the admission margin and
+        drafter overhang were sized for it), and a multi-backend
+        controller needs a step-fn resolver (engine-made schedulers get
+        the engine's pre-warmed families; standalone ones fall back to
+        a scheduler-local cache)."""
+        ks = tuple(getattr(controller, "ks", (0,)))
+        kmax = max(ks) if ks else 0
+        if kmax > 0:
+            if self.spec is None:
+                raise ValueError(
+                    f"controller ks={ks} include positive depths but the "
+                    "scheduler has no speculation configured — build it with "
+                    "spec=SpecConfig(k=max(ks)) so the margin/drafter cover "
+                    "the deepest arm"
                 )
-                if f is not None and hasattr(f, "_cache_size")
-            ]
-            # baseline now: engine-shared fns arrive pre-warmed, and those
-            # compiles are not this run's retraces
-            self._cache_size_seen = sum(f._cache_size() for f in self._traced_fns)
+            if kmax > self.spec.k:
+                raise ValueError(
+                    f"controller kmax={kmax} exceeds spec.k={self.spec.k} — "
+                    "the admission margin and drafter overhang are sized by "
+                    "spec.k, so the deepest candidate must fit inside it"
+                )
+        backends = getattr(controller, "backends", None)
+        if backends is None:
+            controller.backends = (self.attention_backend,)
+        else:
+            # resolve candidate names once (e.g. "kernel" → "interpret"
+            # on CPU) so controller arms and scheduler state agree
+            controller.backends = tuple(
+                dict.fromkeys(
+                    kernel_ops.resolve_attention_backend(b, mesh=self._mesh)
+                    for b in backends
+                )
+            )
+        init_k = getattr(controller, "initial_k", None)
+        if init_k is not None and int(init_k) != self._live_k:
+            self._set_live_k(int(init_k))
+
+    def _resolve_fns(self, backend: str) -> dict:
+        """Step-fn family for ``backend``: the engine's shared cache
+        when this scheduler is engine-made, else a local jit cache (the
+        retrace-free switching contract only holds for pre-warmed
+        engine families — see ``ServingEngine.prime``)."""
+        if self._fn_resolver is not None:
+            return self._fn_resolver(backend)
+        backend = kernel_ops.resolve_attention_backend(backend, mesh=self._mesh)
+        fns = self._local_fns.get(backend)
+        if fns is None:
+            model = self.model
+            fns = {"backend": backend, "decode": model.jit_step("decode_step", backend)}
+            if self.kv_layout == "paged":
+                fns["decode_paged"] = model.jit_step("decode_step_paged", backend)
+            if self.spec is not None:
+                fns["verify"] = model.jit_step("verify_step", backend)
+                if self.kv_layout == "paged":
+                    fns["verify_paged"] = model.jit_step("verify_step_paged", backend)
+            if self.chunk_size is not None:
+                fns["prefill_chunk"] = model.jit_step("prefill_chunk", backend)
+            self._local_fns[backend] = fns
+        return fns
+
+    def _set_backend(self, backend: str) -> None:
+        """Swap the decode/verify attention backend live: a dictionary
+        lookup into the pre-built step family — pool state (KV leaves,
+        block tables, lengths) is backend-independent, so nothing else
+        moves. The trace watch re-baselines so the swap itself is never
+        miscounted as a retrace (and an un-warmed family's first-call
+        compiles still are)."""
+        if backend == self.attention_backend:
+            return
+        fns = self._resolve_fns(backend)
+        self.attention_backend = fns.get("backend", backend)
+        self._decode = fns["decode"]
+        self._decode_paged = fns.get("decode_paged", self._decode_paged)
+        self._verify = fns.get("verify", self._verify)
+        self._verify_paged = fns.get("verify_paged", self._verify_paged)
+        self._prefill_chunk = fns.get("prefill_chunk", self._prefill_chunk)
+        if self._ton:
+            self._rebuild_trace_watch()
+
+    def _set_live_k(self, k: int) -> None:
+        """Re-decide the speculation depth live. Every depth in
+        [1, spec.k] hits a distinct [max_batch, k+1] verify trace in the
+        SAME jitted fn (jit caches per input shape), so after priming
+        the transition is free. The stateful-drafter catch-up: rows that
+        decoded plain while K was 0 advanced the target cache without
+        the draft cache seeing their tokens, so a 0→K transition
+        re-syncs every active row via ``on_admit`` (re-prefilling the
+        committed history, pow2-bucketed — a bounded, off-hot-path
+        cost). K→K′ moves between positive depths need no sync: rollback
+        leaves the draft cache exactly on the committed stream."""
+        k = int(k)
+        if k == self._live_k:
+            return
+        if k < 0 or (k > 0 and (self.spec is None or k > self.spec.k)):
+            cap = self.spec.k if self.spec is not None else 0
+            raise ValueError(f"live k={k} outside [0, {cap}]")
+        was, self._live_k = self._live_k, k
+        if self._drafter is not None and k > 0:
+            if hasattr(self._drafter, "set_k"):
+                self._drafter.set_k(k)
+            if was == 0:
+                for row, req in self._active.items():
+                    self._drafter.on_admit(row, req)
+
+    def _controller_tick(self) -> None:
+        """One observe→decide→apply round, every ``decision_interval``
+        working steps: read the windowed sensor vector, let the
+        controller price the arms, apply the verdict, and record the
+        decision on the telemetry adviser lane + the controller gauges
+        (current K/backend, switches, dwell) — the paper's audit trail,
+        live."""
+        c = self.controller
+        self._ctl_steps += 1
+        if self._ctl_steps % max(1, int(getattr(c, "decision_interval", 8))):
+            return
+        summary = self.stats.registry.window_summary(int(getattr(c, "window", 16)))
+        d = c.decide(
+            summary,
+            k_live=self._live_k,
+            backend_live=self.attention_backend,
+            step=self._ctl_steps,
+        )
+        self._apply_decision(d)
+        reg = self.stats.registry
+        reg.counter("controller.decisions").inc()
+        if d.switched:
+            reg.counter("controller.switches").inc()
+        reg.gauge("controller.k").set(float(self._live_k))
+        backends = getattr(c, "backends", None) or ()
+        reg.gauge("controller.backend_index").set(
+            float(backends.index(self.attention_backend))
+            if self.attention_backend in backends
+            else -1.0
+        )
+        reg.gauge("controller.dwell_remaining").set(
+            float(getattr(c, "dwell_remaining", 0))
+        )
+        self.stats.controller_info = {
+            "decisions": len(getattr(c, "decisions", ())) or self._ctl_steps,
+            "switches": int(getattr(c, "n_switches", 0)),
+            "k": self._live_k,
+            "backend": self.attention_backend,
+            "admit_budget": self._admit_budget,
+            "dwell_remaining": int(getattr(c, "dwell_remaining", 0)),
+        }
+        self.tel.tracer.instant(
+            "online-decision", "adviser", tid=TID_ADVISER, args=d.to_json()
+        )
+
+    def _apply_decision(self, d) -> None:
+        """Apply one ``Decision``: backend first (the verify trace the
+        new K lands on must belong to the new family), then depth, then
+        the admission budget."""
+        if d.backend is not None:
+            self._set_backend(d.backend)
+        if d.k is not None:
+            self._set_live_k(d.k)
+        self._admit_budget = (
+            max(1, int(d.admit_budget)) if d.admit_budget is not None else None
+        )
 
     # ------------------------------------------------------------------
     # plan routing (PR 1 contract, now over the active-slot view)
@@ -510,7 +704,7 @@ class Scheduler:
                     self._resume_decode(req, slot, now)
                 else:
                     self._start_decode(req, slot, logits[i], now)
-                if self._drafter is not None and not req.finished:
+                if self._drafter is not None and self._live_k > 0 and not req.finished:
                     self._drafter.on_admit(slot, req)
 
     def _start_chunk_slot(self, req: Request, now: float) -> None:
@@ -632,7 +826,7 @@ class Scheduler:
             self._resume_decode(req, row, now)
         else:
             self._start_decode(req, row, logits[0], now)
-        if self._drafter is not None and not req.finished:
+        if self._drafter is not None and self._live_k > 0 and not req.finished:
             self._drafter.on_admit(row, req)
         return True
 
@@ -742,7 +936,7 @@ class Scheduler:
         release their un-needed claimed tail blocks, and a stateful
         drafter rolls back by the same per-row vector (DESIGN.md §3.2).
         """
-        K = self.spec.k
+        K = self._live_k
         t_start = time.perf_counter()
         with self.tel.annotate("serve.draft"):
             drafts = self._drafter.propose(self._active, np.asarray(self._tok))
@@ -815,9 +1009,15 @@ class Scheduler:
         """Admit arrived requests, highest priority first, preempting a
         strictly-lower-priority live row when the pool is dry. The loop
         terminates: each admission consumes capacity and each preemption
-        strictly raises the active set's priority multiset, both finite."""
+        strictly raises the active set's priority multiset, both finite.
+        A controller-set ``_admit_budget`` caps admissions per step
+        (back-pressure under preemption churn); ``None`` is unlimited."""
         admitted = False
+        n_admitted = 0
+        budget = self._admit_budget
         while True:
+            if budget is not None and n_admitted >= budget:
+                return admitted
             arrived = [r for r in self._queue if r.arrival_time <= now]
             if not arrived:
                 return admitted
@@ -826,9 +1026,12 @@ class Scheduler:
                 if self._try_admit_paged(head, now):
                     self._queue.remove(head)
                     admitted = True
+                    n_admitted += 1
                     continue
             else:
                 wave = arrived[: self.kv.n_free]
+                if budget is not None:
+                    wave = wave[: budget - n_admitted]
                 if wave:
                     for r in wave:
                         self._queue.remove(r)
@@ -838,6 +1041,7 @@ class Scheduler:
                     else:
                         self._admit(wave, now)
                     admitted = True
+                    n_admitted += len(wave)
                     continue
                 head = arrived[0]
             if not self._maybe_preempt(head):
@@ -901,7 +1105,7 @@ class Scheduler:
             self._resume_decode(req, row, now)
         else:
             self._start_decode(req, row, logits_row, now)
-        if self._drafter is not None and not req.finished:
+        if self._drafter is not None and self._live_k > 0 and not req.finished:
             self._drafter.on_admit(row, req)
 
     def prime(self) -> None:
@@ -964,7 +1168,16 @@ class Scheduler:
         """Admit arrived requests, spend the chunked-prefill token
         budget, then run one batched decode over the live set. Returns
         False when there was nothing to do. ``step_ms`` covers the whole
-        step, so prefill stalls show up in the tail they cause."""
+        step, so prefill stalls show up in the tail they cause. With a
+        controller attached, every working step also advances the
+        observe→decide→apply loop (after the telemetry tick, so the
+        decision prices a window that includes this step)."""
+        did = self._step_inner(now)
+        if did and self.controller is not None:
+            self._controller_tick()
+        return did
+
+    def _step_inner(self, now: Optional[float] = None) -> bool:
         if now is None:
             now = self._clock()
         t0 = time.perf_counter()
@@ -984,7 +1197,7 @@ class Scheduler:
                     )
                 return True
             return False
-        if self.spec is not None:
+        if self.spec is not None and self._live_k > 0:
             self._spec_step()
             self.stats.step_ms.append((time.perf_counter() - t0) * 1e3)
             if ton:

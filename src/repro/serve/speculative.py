@@ -117,6 +117,12 @@ class NGramDraftSource:
     def on_admit(self, row: int, req) -> None:
         pass  # the request history IS the state
 
+    def set_k(self, k: int) -> None:
+        """Re-depth the proposal window live (online adviser K
+        re-decision): the lookup is stateless, so this only resizes the
+        proposal matrix for subsequent rounds."""
+        self.k = int(k)
+
     def propose(self, active: dict, tok: np.ndarray) -> np.ndarray:
         out = np.zeros((self._max_batch, self.k), np.int32)
         for row, req in active.items():
@@ -175,6 +181,7 @@ class ModelDraftSource:
         self.model = model
         self.params = params
         self.k = int(k)
+        self._k_max = int(k)  # construction depth sizes the cache overhang
         # the draft stream decodes through the same attention backend
         # as the target (the scheduler passes its resolved backend via
         # make_drafter), bound statically like every jitted step
@@ -182,8 +189,19 @@ class ModelDraftSource:
         self._prefill = None  # needs max_seq: built in bind()
         self.cache = None
 
+    def set_k(self, k: int) -> None:
+        """Re-depth the draft loop live (online adviser K re-decision).
+        The cache overhang was sized for the construction depth, so the
+        live depth may only move within it."""
+        if not 0 < int(k) <= self._k_max:
+            raise ValueError(
+                f"live k={k} outside (0, {self._k_max}] — the draft cache "
+                f"overhang was bound for k={self._k_max}"
+            )
+        self.k = int(k)
+
     def bind(self, max_batch: int, max_seq: int) -> None:
-        self._max_seq = int(max_seq) + self.k + 1  # speculative overhang
+        self._max_seq = int(max_seq) + self._k_max + 1  # speculative overhang
         model = self.model
         seq = self._max_seq
         self._prefill = jax.jit(

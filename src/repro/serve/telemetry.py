@@ -53,6 +53,7 @@ an import cycle through the serving package.
 from __future__ import annotations
 
 import json
+import math
 import time
 from collections import deque
 from contextlib import nullcontext
@@ -239,27 +240,38 @@ class MetricsRegistry:
 
     def window_summary(self, n: int = 32) -> dict[str, Any]:
         """The online-adviser signal vector over the last ``n`` steps
-        (ROADMAP "online adaptive adviser"): windowed speculation
-        acceptance, queue depth, pool occupancy/pressure, and step
-        cost, plus the admission/preemption/eviction rates that price a
-        re-decision.  Purely a read — token streams are unaffected."""
+        (``serve.controller.OnlineAdviser`` consumes this every
+        decision interval): windowed speculation acceptance, the
+        draft/verify cost split, queue depth, pool occupancy/pressure,
+        and step cost, plus the admission/preemption/eviction rates
+        that price a re-decision.  Purely a read — token streams are
+        unaffected.
+
+        Cold-start contract: every value is a well-defined finite float
+        (or int) even with zero ticks, a window shorter than ``n``, or
+        all-zero denominators — the controller reads this vector on
+        step 1, before any speculation/prefill has happened, and 0.0
+        means "no signal yet", never NaN/None."""
         proposed = self.window_delta("serve.spec_proposed", n)
         accepted = self.window_delta("serve.spec_accepted", n)
         prompt = self.window_delta("serve.prompt_tokens", n)
         hits = self.window_delta("serve.prefix_hit_tokens", n)
         eff = max(1, min(n, self._ticks))
-        return {
+        summary = {
             "window": min(n, self._ticks),
             "ticks": self._ticks,
             "acceptance_rate": accepted / proposed if proposed else 0.0,
             "proposed": proposed,
             "accepted": accepted,
+            "spec_steps": self.window_delta("serve.spec_steps", n),
             "queue_depth": self.window_mean("sched.queue_depth", n),
             "active": self.window_mean("sched.active", n),
             "pool_occupancy": self.window_mean("pool.occupancy", n),
             "pool_free_blocks": self.window_mean("pool.free_blocks", n),
             "step_cost_ms": self.series_quantile("serve.step_ms", 50.0, n),
             "p99_step_ms": self.series_quantile("serve.step_ms", 99.0, n),
+            "p50_draft_ms": self.series_quantile("serve.draft_ms", 50.0, n),
+            "p50_verify_ms": self.series_quantile("serve.verify_ms", 50.0, n),
             "admitted": self.window_delta("sched.admitted", n),
             "preemptions": self.window_delta("serve.preemptions", n),
             "rejected": self.window_delta("serve.rejected_submissions", n),
@@ -269,6 +281,10 @@ class MetricsRegistry:
             "evict_rate": self.window_delta("pool.evict", n) / eff,
             "park_rate": self.window_delta("pool.park", n) / eff,
             "retraces": self.window_delta("engine.retraces", n),
+        }
+        return {
+            k: (v if isinstance(v, int) else (float(v) if math.isfinite(v) else 0.0))
+            for k, v in summary.items()
         }
 
     # -- exposition --------------------------------------------------

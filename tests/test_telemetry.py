@@ -129,6 +129,7 @@ def test_window_summary_schema():
     summary = reg.window_summary(8)
     for key in (
         "window", "ticks", "acceptance_rate", "proposed", "accepted",
+        "spec_steps", "p50_draft_ms", "p50_verify_ms",
         "queue_depth", "active", "pool_occupancy", "pool_free_blocks",
         "step_cost_ms", "p99_step_ms", "admitted", "preemptions",
         "rejected", "prefix_hit_rate", "chunk_utilization",
